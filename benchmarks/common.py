@@ -1,0 +1,33 @@
+"""Shared benchmark utilities.
+
+CPU-container caveat: wall-clock numbers here are CPU-emulation times
+(Pallas kernels run in interpret mode) — they validate RELATIVE claims
+(speedup ratios, scaling curves, byte counts). Columns labelled
+``derived`` are computed from byte/op accounting, not measured.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["timeit", "emit"]
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    """Median wall seconds for fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, value, unit: str, derived: bool = False, **extra):
+    tag = "derived" if derived else "measured"
+    kv = ",".join(f"{k}={v}" for k, v in extra.items())
+    print(f"{name},{value},{unit},{tag},{kv}", flush=True)

@@ -1,0 +1,34 @@
+"""Fig. 8c: 1-bit GEMM throughput vs adjacency size N (AX, D in {16,32,64}).
+
+Validates the scaling SHAPE: throughput grows with N then saturates, and
+larger D utilizes the device better. Runs the XLA popcount path jitted
+(the Pallas kernel interprets too slowly on CPU for big N; the compute
+graph is identical).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import bitops
+
+
+def main():
+    for d in (16, 32, 64):
+        for n in (128, 512, 2048, 8192):
+            rng = np.random.default_rng(n + d)
+            a = jnp.asarray((rng.random((n, n)) < 0.1).astype(np.int32))
+            x = jnp.asarray(rng.integers(0, 2, (n, d)), jnp.int32)
+            ap = bitops.pack_a(a, 1)
+            xp = bitops.pack_b(x, 1)
+            f = jax.jit(bitops.bitserial_matmul_packed)
+            t = timeit(f, ap, xp)
+            gops = 2 * n * n * d / t / 1e9
+            emit(f"fig8c_N{n}_D{d}", round(gops, 2), "gops",
+                 us=round(t * 1e6, 1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fig. 9b: CPU->device transfer strategies I/II/III.
+
+  I   dense adjacency + dense features, two transfers
+  II  sparse edge list + dense features, two transfers + device scatter
+  III QGTC packed compound buffer, ONE transfer + device unpack
+
+measured: wall time incl. device_put (host->device copy on CPU backend —
+relative ordering carries; the absolute PCIe constants obviously differ).
+derived: exact bytes moved per strategy (what drives the paper's 15.5x/1.54x).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graph import batching, datasets, packing, partition
+
+
+def _t(fn, iters=5):
+    fn()  # warmup
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn()[0])
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def main(scale: float = 0.02):
+    for name in ("ogbn-arxiv", "ogbn-products"):
+        ds_scale = scale * (0.1 if name == "ogbn-products" else 1.0)
+        data = datasets.load(name, scale=ds_scale)
+        parts = partition.partition(data.csr, 8)
+        b = batching.make_batches(data, parts, 4, shuffle=False)[0]
+        nb = packing.compound_nbytes(b, nbits=8)
+        t1 = _t(lambda: packing.transfer_dense(b))
+        t2 = _t(lambda: packing.transfer_sparse(b))
+        t3 = _t(lambda: packing.transfer_packed(b, nbits=8)[:2])
+        emit(f"fig9b_{name}_I_dense", round(t1 * 1e3, 2), "ms",
+             bytes=nb["I_dense"])
+        emit(f"fig9b_{name}_II_sparse", round(t2 * 1e3, 2), "ms",
+             bytes=nb["II_sparse"])
+        emit(f"fig9b_{name}_III_packed", round(t3 * 1e3, 2), "ms",
+             bytes=nb["III_packed"], speedup_vs_I=round(t1 / t3, 2),
+             speedup_vs_II=round(t2 / t3, 2))
+        emit(f"fig9b_{name}_bytes_ratio_I_III",
+             round(nb["I_dense"] / nb["III_packed"], 1), "x", derived=True)
+        emit(f"fig9b_{name}_bytes_ratio_II_III",
+             round(nb["II_sparse"] / nb["III_packed"], 2), "x", derived=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Run every paper-table benchmark. CSV: name,value,unit,tag,extras."""
+from __future__ import annotations
+
+import time
+import traceback
+
+from benchmarks import (fig7_speedup, fig8a_lowbit_gemm, fig8b_zerotile,
+                        fig8c_adjsize, fig9a_reuse, fig9b_transfer,
+                        table2_accuracy)
+
+SUITES = [
+    ("fig7", fig7_speedup.main),
+    ("fig8a", fig8a_lowbit_gemm.main),
+    ("fig8b", fig8b_zerotile.main),
+    ("fig8c", fig8c_adjsize.main),
+    ("fig9a", fig9a_reuse.main),
+    ("fig9b", fig9b_transfer.main),
+    ("table2", table2_accuracy.main),
+]
+
+
+def main() -> None:
+    print("name,value,unit,tag,extras")
+    for name, fn in SUITES:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            print(f"# {name} FAILED:\n" + traceback.format_exc())
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: the QGTC public API in 60 lines.
+
+  1. quantize float tensors to any bitwidth -> BitTensor (3D-stacked packed)
+  2. exact any-bitwidth matmul by 1-bit composition (bitMM2Int / bitMM2Bit)
+  3. the Pallas TPU kernel path (validated in interpret mode on CPU)
+  4. zero-tile jumping on a sparse binary adjacency
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops, bittensor as bt
+from repro.core.zerotile import occupancy_stats, tile_occupancy
+from repro.kernels import ops as kops
+
+rng = np.random.default_rng(0)
+
+# --- 1. any-bitwidth quantization into the bit-Tensor type ------------------
+x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)   # activations
+w = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)   # weights
+tx = bt.to_bit(x, nbits=3, pack_axis=1)   # 3-bit, packed along K (Fig. 4b)
+tw = bt.to_bit(w, nbits=2, pack_axis=0)   # 2-bit, packed along K (Fig. 4c)
+print(f"x: fp32 {tx.logical_nbytes_fp32}B -> 3-bit packed {tx.nbytes}B "
+      f"({tx.logical_nbytes_fp32 / tx.nbytes:.1f}x smaller)")
+
+# --- 2. exact integer matmul by 1-bit composition (paper Eq. 5/6) -----------
+prod = bt.bitmm2int(tx, tw)               # == quantize(x) @ quantize(w)
+ref = bt.to_val(tx) @ bt.to_val(tw)
+assert (np.asarray(prod) == np.asarray(ref)).all()
+print("bitmm2int == integer matmul: exact")
+
+# low-bit output for the next layer (inter-layer fusion contract, §4.5)
+nxt = bt.bitmm2bit(tx, tw, out_bits=4)
+print(f"bitmm2bit -> {nxt.nbits}-bit BitTensor, shape {nxt.shape}")
+
+# --- 3. the Pallas TPU kernel (interpret mode on CPU) ------------------------
+got = bt.bitmm2int(tx, tw, impl="pallas")
+assert (np.asarray(got) == np.asarray(ref)).all()
+print("Pallas bitserial kernel == oracle: exact")
+
+# --- 4. zero-tile jumping on a sparse adjacency (paper §4.3) -----------------
+# block-diagonal adjacency: the structure batched METIS subgraphs produce
+adj = np.zeros((256, 256), np.int32)
+for i in range(2):
+    blk = slice(i * 128, (i + 1) * 128)
+    adj[blk, blk] = (rng.random((128, 128)) < 0.05).astype(np.int32)
+feat = rng.integers(0, 2, (256, 64)).astype(np.int32)       # binary features
+ap = bitops.pack_a(jnp.asarray(adj), 1)[0]
+fp = bitops.pack_b(jnp.asarray(feat), 1)[0]
+out = kops.bgemm(ap, fp, jump="compact")                    # skips zero tiles
+assert (np.asarray(out) == adj @ feat).all()
+app = bitops.pad_to(bitops.pad_to(ap, 0, 8), 1, 4)
+st = occupancy_stats(tile_occupancy(app, 8, 4))
+print(f"zero-tile jumping: skipped {st['skip_ratio']:.0%} of "
+      f"{st['tiles_total']} TC tiles, result exact")
+print("OK")

@@ -1,0 +1,70 @@
+"""Serve a small LM with batched requests through the decode engine,
+comparing bf16 weights vs QGTC weight-only quantization (the paper's
+bit compression applied to the memory-bound decode path).
+
+Run:  PYTHONPATH=src python examples/serve_quantized_lm.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import smoke_config
+from repro.core.qgemm import weight_quantize, wq_matmul, weight_dequantize
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import DecodeEngine
+from repro.models import lm
+from repro.train import data as data_lib
+
+
+def main():
+    cfg = smoke_config(configs.get("codeqwen1.5-7b"))
+    cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, d_ff=256)
+    mesh = make_local_mesh()
+    rules = shd.make_rules("serve")
+    with mesh, shd.shard_ctx(mesh, rules):
+        params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg)
+
+        # --- QGTC weight-only quantization of every 2-D projection ---------
+        n_bytes_fp = n_bytes_q = 0
+        qparams = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            key = jax.tree_util.keystr(path)
+            if leaf.ndim >= 2 and "embed" not in key and leaf.size > 4096:
+                w2 = leaf.reshape(-1, leaf.shape[-1]).astype(jnp.float32)
+                wq = weight_quantize(w2, nbits=4)
+                n_bytes_fp += leaf.size * 2
+                n_bytes_q += wq.data.size * 0.5 + wq.scale.size * 4  # 4b packed
+        print(f"# weight-only 4-bit: {n_bytes_fp / 1e6:.1f} MB bf16 -> "
+              f"{n_bytes_q / 1e6:.1f} MB packed "
+              f"({n_bytes_fp / max(n_bytes_q, 1):.1f}x less HBM decode traffic)")
+
+        # quantize->dequantize roundtrip into the serving params (W4 effect)
+        def q4(leaf, key):
+            if leaf.ndim == 2 and "embed" not in key and leaf.size > 4096:
+                wq = weight_quantize(leaf.astype(jnp.float32), 4)
+                return weight_dequantize(wq).astype(leaf.dtype)
+            return leaf
+
+        params_q = jax.tree_util.tree_map_with_path(
+            lambda p, l: q4(l, jax.tree_util.keystr(p)), params)
+
+        engine_fp = DecodeEngine(cfg, params, batch_slots=4, max_seq=64)
+        engine_q4 = DecodeEngine(cfg, params_q, batch_slots=4, max_seq=64)
+        toks, _ = data_lib.synthetic_batch(jnp.asarray(0), jnp.asarray(0),
+                                           batch=4, seq=24, vocab=cfg.vocab)
+        out_fp, st_fp = engine_fp.generate(np.asarray(toks), max_new=12)
+        out_q4, st_q4 = engine_q4.generate(np.asarray(toks), max_new=12)
+        agree = float((out_fp == out_q4).mean())
+        print(f"# bf16 engine: {st_fp}")
+        print(f"# w4 engine:   {st_q4}")
+        print(f"# greedy token agreement bf16 vs w4: {agree:.2%} "
+              f"(random-init model: any overlap indicates consistent decode)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture config registry.
+
+``get("minitron-8b")`` -> ModelConfig; ``ARCHS`` lists all assigned ids.
+Dash-separated public ids map to underscore module files.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, supports, smoke_config
+
+ARCHS = [
+    "moonshot-v1-16b-a3b",
+    "olmoe-1b-7b",
+    "minitron-8b",
+    "codeqwen1.5-7b",
+    "h2o-danube-3-4b",
+    "stablelm-12b",
+    "rwkv6-1.6b",
+    "internvl2-2b",
+    "whisper-large-v3",
+    "zamba2-7b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+_MODULES["qgtc-gcn"] = "qgtc_gnn"
+_MODULES["qgtc-gin"] = "qgtc_gnn"
+
+
+def get(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choices: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if name.startswith("qgtc-"):
+        return mod.GNN_CONFIGS[name]
+    return mod.CONFIG
+
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "supports", "smoke_config",
+           "ARCHS", "get"]

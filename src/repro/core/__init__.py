@@ -1,0 +1,14 @@
+# QGTC core: any-bitwidth quantized arithmetic by 1-bit composition (paper §3),
+# 3D-stacked bit compression (§4.2), zero-tile machinery (§4.3), and the
+# BitTensor framework integration (§5) — all in JAX.
+from repro.core.bittensor import BitTensor, bitmm2bit, bitmm2int, to_bit, to_float, to_val
+from repro.core.quantize import QuantParams, calibrate, dequantize, fake_quant
+from repro.core.qgemm import WeightQ, qgemm, weight_quantize, wq_matmul
+
+# NOTE: the Eq.2 quantize() function lives at repro.core.quantize.quantize;
+# it is deliberately not re-exported here so the submodule name stays usable.
+__all__ = [
+    "BitTensor", "bitmm2bit", "bitmm2int", "to_bit", "to_float", "to_val",
+    "QuantParams", "calibrate", "dequantize", "fake_quant",
+    "WeightQ", "qgemm", "weight_quantize", "wq_matmul",
+]

@@ -1,0 +1,174 @@
+"""Pure-JAX bit decomposition / 3D-stacked bit compression / bit-serial matmul.
+
+These are the XLA-path implementations of QGTC §3 (1-bit composition) and
+§4.2 (3D-stacked bit compression). They are exact over the unsigned
+quantized domain: for s-bit A (M,K) and t-bit B (K,N),
+
+    bitserial_matmul(A, B, s, t)  ==  A @ B   (int32, exactly)
+
+The packed layouts mirror the paper:
+  A: (s, M, ceil(K/32))  uint32   -- "column-wise" compression: bits of the
+                                     reduction dim K packed along words so a
+                                     row of A reads contiguously (Fig. 4b)
+  B: (t, ceil(K/32), N)  uint32   -- "row-wise" compression (Fig. 4c)
+Little-endian within each 32-bit word (paper Fig. 4 note).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pad_to",
+    "bit_decompose",
+    "bit_compose",
+    "pack_along_axis",
+    "unpack_along_axis",
+    "pack_a",
+    "pack_b",
+    "popcount_matmul_packed",
+    "bitserial_matmul",
+    "bitserial_matmul_packed",
+]
+
+WORD = 32
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple (paper's PAD8 / PAD128)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def bit_decompose(q: jax.Array, nbits: int) -> jax.Array:
+    """(..., ) int32 unsigned-range -> (nbits, ...) 0/1 int32 planes."""
+    shifts = jnp.arange(nbits, dtype=jnp.int32).reshape((nbits,) + (1,) * q.ndim)
+    return (q[None] >> shifts) & 1
+
+
+def bit_compose(planes: jax.Array) -> jax.Array:
+    """(nbits, ...) 0/1 -> int32 values. Inverse of bit_decompose."""
+    nbits = planes.shape[0]
+    shifts = jnp.arange(nbits, dtype=jnp.int32).reshape((nbits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) << shifts, axis=0)
+
+
+def pack_along_axis(bits: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack 0/1 values into uint32 words along ``axis`` (little-endian).
+
+    Shape (..., K, ...) -> (..., ceil(K/32), ...). K is zero-padded to a
+    word boundary first.
+    """
+    axis = axis % bits.ndim
+    bits = pad_to(bits, axis, WORD)
+    k = bits.shape[axis]
+    new_shape = bits.shape[:axis] + (k // WORD, WORD) + bits.shape[axis + 1 :]
+    b = bits.reshape(new_shape).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)).reshape(
+        (1,) * (axis + 1) + (WORD,) + (1,) * (bits.ndim - axis - 1)
+    )
+    return jnp.sum(b * weights, axis=axis + 1, dtype=jnp.uint32)
+
+
+def unpack_along_axis(packed: jax.Array, axis: int = -1, size: int | None = None) -> jax.Array:
+    """Inverse of pack_along_axis; optionally crop the axis back to ``size``."""
+    axis = axis % packed.ndim
+    shifts = jnp.arange(WORD, dtype=jnp.uint32).reshape(
+        (1,) * (axis + 1) + (WORD,) + (1,) * (packed.ndim - axis - 1)
+    )
+    expanded = (jnp.expand_dims(packed, axis + 1) >> shifts.astype(jnp.uint32)) & jnp.uint32(1)
+    # merge (axis: W, axis+1: 32) -> axis: W*32
+    shp = list(expanded.shape)
+    shp[axis : axis + 2] = [shp[axis] * WORD]
+    out = expanded.reshape(shp).astype(jnp.int32)
+    if size is not None:
+        out = jax.lax.slice_in_dim(out, 0, size, axis=axis)
+    return out
+
+
+def pack_a(q: jax.Array, nbits: int) -> jax.Array:
+    """A (M, K) s-bit int32 -> (s, M, ceil(K/32)) uint32 (column-wise, Fig 4b)."""
+    planes = bit_decompose(q, nbits)  # (s, M, K)
+    return pack_along_axis(planes, axis=-1)
+
+
+def pack_b(q: jax.Array, nbits: int) -> jax.Array:
+    """B (K, N) t-bit int32 -> (t, ceil(K/32), N) uint32 (row-wise, Fig 4c)."""
+    planes = bit_decompose(q, nbits)  # (t, K, N)
+    return pack_along_axis(planes, axis=-2)
+
+
+def popcount_matmul_packed(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """popcount(AND) GEMM over packed words: (M,W)x(W,N) -> int32 (M,N).
+
+    This is the paper's Eq. 7 `popcnt(v_i & v_j)` extended to a matmul.
+    Pure-jnp oracle; the Pallas kernel computes the same thing tiled.
+    """
+    anded = a_packed[:, :, None] & b_packed[None, :, :]
+    return jnp.sum(jax.lax.population_count(anded).astype(jnp.int32), axis=1)
+
+
+def bitserial_matmul_packed(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Packed (s,M,W) x (t,W,N) -> exact int32 (M,N) via Eq. 5/6 composition."""
+    s, t = a_packed.shape[0], b_packed.shape[0]
+    m, n = a_packed.shape[1], b_packed.shape[2]
+    acc = jnp.zeros((m, n), jnp.int32)
+    for i in range(s):
+        for j in range(t):
+            acc = acc + (popcount_matmul_packed(a_packed[i], b_packed[j]) << (i + j))
+    return acc
+
+
+def bitserial_matmul(
+    aq: jax.Array,
+    bq: jax.Array,
+    s: int,
+    t: int,
+    impl: str = "dot",
+) -> jax.Array:
+    """Exact int32 matmul of unsigned s-bit x t-bit operands by 1-bit composition.
+
+    impl='dot'      : per-plane int8 dot products (XLA/MXU-friendly emulation)
+    impl='popcount' : packed AND+popcount (the VPU bit-serial semantics)
+    Both return exactly aq @ bq (int32).
+    """
+    if impl == "popcount":
+        return bitserial_matmul_packed(pack_a(aq, s), pack_b(bq, t))
+    if impl != "dot":
+        raise ValueError(f"unknown impl {impl!r}")
+    a_planes = bit_decompose(aq, s).astype(jnp.int8)  # (s, M, K)
+    b_planes = bit_decompose(bq, t).astype(jnp.int8)  # (t, K, N)
+    m, n = aq.shape[0], bq.shape[1]
+    acc = jnp.zeros((m, n), jnp.int32)
+    for i in range(s):
+        for j in range(t):
+            prod = jax.lax.dot_general(
+                a_planes[i],
+                b_planes[j],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = acc + (prod << (i + j))
+    return acc
+
+
+def packing_ratio(nbits: int, dtype_bits: int = 32) -> float:
+    """Memory compression vs a full-precision tensor (for reporting)."""
+    return dtype_bits / float(nbits)
+
+
+def np_pack_words(bits: np.ndarray) -> np.ndarray:
+    """Host-side (numpy) packing used by the subgraph packer; little-endian."""
+    k = bits.shape[-1]
+    pad = (-k) % WORD
+    if pad:
+        bits = np.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    shaped = bits.reshape(bits.shape[:-1] + (-1, WORD)).astype(np.uint32)
+    weights = (np.uint32(1) << np.arange(WORD, dtype=np.uint32))
+    return (shaped * weights).sum(-1, dtype=np.uint32)

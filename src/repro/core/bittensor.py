@@ -1,0 +1,150 @@
+"""BitTensor: the JAX analogue of QGTC's PyTorch bit-Tensor extension (§5).
+
+A BitTensor rides on uint32 storage (the paper's "vehicle" int32 Tensor),
+carries its bitwidth + logical shape + affine quant params, and is a
+registered pytree so it flows through jit / grad / pjit / checkpointing.
+
+APIs mirror the paper:
+  to_bit(x, nbits [, qp])  ~  Tensor.to_bit(nbits)
+  to_val(bt)               ~  Tensor.to_val(nbits)   (decode to int32)
+  to_float(bt)             ~  decode + dequantize
+  bitmm2int(a, b)          ~  bitMM2Int(C, A, B, bit_A, bit_B)
+  bitmm2bit(a, b, out_bits)~  bitMM2Bit(..., bit_C)  (requantized output)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.quantize import QuantParams, calibrate, dequantize, quantize
+
+__all__ = ["BitTensor", "to_bit", "to_val", "to_float", "bitmm2int", "bitmm2bit"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BitTensor:
+    """Packed bit-plane tensor.
+
+    data: uint32, shape (nbits, *outer, ceil(shape[pack_axis]/32), *rest)
+          — the logical ``pack_axis`` is replaced by a word axis.
+    shape: the logical int shape.
+    pack_axis: which logical axis is packed (normalized, >= 0).
+    qp: affine params mapping the unsigned quantized domain back to floats
+        (None for inherently-binary data like adjacency matrices).
+    """
+
+    data: jax.Array
+    nbits: int
+    shape: tuple
+    pack_axis: int
+    qp: QuantParams | None = None
+
+    def tree_flatten(self):
+        return (self.data, self.qp), (self.nbits, self.shape, self.pack_axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        data, qp = leaves
+        nbits, shape, pack_axis = aux
+        return cls(data, nbits, shape, pack_axis, qp)
+
+    @property
+    def nbytes(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.data.shape)) * 4
+
+    @property
+    def logical_nbytes_fp32(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.shape)) * 4
+
+
+def to_bit(
+    x: jax.Array,
+    nbits: int,
+    qp: QuantParams | None = None,
+    pack_axis: int = -1,
+    prequantized: bool = False,
+) -> BitTensor:
+    """Quantize (unless already int in [0, 2^nbits)) and pack to a BitTensor."""
+    if prequantized or jnp.issubdtype(x.dtype, jnp.integer):
+        q = x.astype(jnp.int32)
+    else:
+        if qp is None:
+            qp = calibrate(x, nbits)
+        q = quantize(x, qp)
+    pack_axis = pack_axis % q.ndim
+    planes = bitops.bit_decompose(q, nbits)  # (nbits, *shape)
+    packed = bitops.pack_along_axis(planes, axis=pack_axis + 1)
+    return BitTensor(packed, nbits, tuple(q.shape), pack_axis, qp)
+
+
+def to_val(bt: BitTensor) -> jax.Array:
+    """Decode a BitTensor to its unsigned int32 values (paper's to_val)."""
+    planes = bitops.unpack_along_axis(
+        bt.data, axis=bt.pack_axis + 1, size=bt.shape[bt.pack_axis]
+    )
+    return bitops.bit_compose(planes)
+
+
+def to_float(bt: BitTensor) -> jax.Array:
+    v = to_val(bt)
+    if bt.qp is None:
+        return v.astype(jnp.float32)
+    return dequantize(v, bt.qp)
+
+
+def _check_mm(a: BitTensor, b: BitTensor):
+    if len(a.shape) != 2 or len(b.shape) != 2:
+        raise ValueError("bitmm expects rank-2 BitTensors")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if a.pack_axis != 1 or b.pack_axis != 0:
+        raise ValueError(
+            "bitmm requires A packed along K (axis 1, 'column-wise') and "
+            "B packed along K (axis 0, 'row-wise') per Fig. 4"
+        )
+
+
+def bitmm2int(a: BitTensor, b: BitTensor, impl: str = "popcount") -> jax.Array:
+    """Any-bitwidth MM with exact int32 output (paper bitMM2Int)."""
+    _check_mm(a, b)
+    if impl == "popcount":
+        out = bitops.bitserial_matmul_packed(a.data, b.data)
+    elif impl == "dot":
+        out = bitops.bitserial_matmul(to_val(a), to_val(b), a.nbits, b.nbits, impl="dot")
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+
+        out = kops.bitserial_gemm(a.data, b.data)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out[: a.shape[0], : b.shape[1]]
+
+
+def bitmm2bit(
+    a: BitTensor,
+    b: BitTensor,
+    out_bits: int,
+    out_qp: QuantParams | None = None,
+    impl: str = "popcount",
+) -> BitTensor:
+    """Any-bitwidth MM with requantized low-bit output (paper bitMM2Bit).
+
+    The int32 accumulator is requantized to ``out_bits`` (dynamic min/max
+    calibration when ``out_qp`` is None) and re-packed along the last axis,
+    ready to serve as the next layer's A operand — this is the §4.5
+    inter-layer fusion contract.
+    """
+    acc = bitmm2int(a, b, impl=impl)
+    accf = acc.astype(jnp.float32)
+    if out_qp is None:
+        out_qp = calibrate(accf, out_bits)
+    q = quantize(accf, out_qp)
+    return to_bit(q, out_bits, qp=out_qp, pack_axis=-1, prequantized=True)

@@ -1,0 +1,98 @@
+"""Quantized GEMM dispatch + weight-quantization utilities for serving.
+
+Three execution paths for the paper's any-bitwidth GEMM:
+  'dot'      — per-bit-plane int8 XLA dots (MXU emulation; fast on any backend)
+  'popcount' — packed AND+popcount in pure jnp (bit-serial semantics, oracle)
+  'pallas'   — the TPU Pallas kernel (kernels/bitserial.py), validated in
+               interpret mode on CPU
+
+plus weight-only quantization (`WeightQ`) used by the LM serving stack: the
+QGTC bit-packing applied to static weights with per-channel scales. This is
+the "beyond the paper's GNNs" integration: the same 3D-stacked compression
+shrinks HBM traffic for memory-bound decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.quantize import QuantParams, calibrate, quantize
+
+__all__ = ["qgemm", "WeightQ", "weight_quantize", "weight_dequantize", "wq_matmul"]
+
+
+def qgemm(aq: jax.Array, bq: jax.Array, s: int, t: int, impl: str = "dot") -> jax.Array:
+    """Exact int32 (M,K)@(K,N) over unsigned s-bit x t-bit quantized operands."""
+    if impl in ("dot", "popcount"):
+        return bitops.bitserial_matmul(aq, bq, s, t, impl=impl)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        m, n = aq.shape[0], bq.shape[1]
+        out = kops.bitserial_gemm(bitops.pack_a(aq, s), bitops.pack_b(bq, t))
+        return out[:m, :n]
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WeightQ:
+    """Weight-only quantized matrix: sub-byte storage + per-out-channel scale.
+
+    ``data`` holds the quantized values: int8 for nbits<=8 (int4 pairs are
+    kept one-per-int8 for XLA-dot friendliness; the *packed* uint32 planes
+    are stored too when ``packed`` is set, for the Pallas path and for true
+    HBM footprint accounting).
+    """
+
+    data: jax.Array  # int8 (K, N), values in [0, 2^nbits)
+    scale: jax.Array  # (1, N) float32 per-out-channel
+    zero: jax.Array  # (1, N) float32
+    nbits: int
+    packed: jax.Array | None = None  # (nbits, K/32, N) uint32
+
+    def tree_flatten(self):
+        return (self.data, self.scale, self.zero, self.packed), self.nbits
+
+    @classmethod
+    def tree_unflatten(cls, nbits, leaves):
+        data, scale, zero, packed = leaves
+        return cls(data, scale, zero, nbits, packed)
+
+
+def weight_quantize(w: jax.Array, nbits: int, keep_packed: bool = False) -> WeightQ:
+    """Per-out-channel affine quantization of a (K, N) weight matrix.
+
+    Storage is int8, *signed-centered*: the unsigned q in [0, 2^nbits) is
+    stored as q - 2^(nbits-1) so 8-bit fits int8; the offset folds into
+    ``zero``. The uint32 bit-planes (Pallas path / true HBM footprint) pack
+    the original unsigned values.
+    """
+    if nbits > 8:
+        raise ValueError("weight-only quantization supports nbits <= 8")
+    qp = calibrate(w, nbits, axis=0)
+    q = quantize(w, qp)
+    packed = bitops.pack_b(q, nbits) if keep_packed else None
+    offset = 1 << (nbits - 1)
+    zero = qp.zero + offset * qp.scale
+    return WeightQ((q - offset).astype(jnp.int8), qp.scale, zero, nbits, packed)
+
+
+def weight_dequantize(wq: WeightQ) -> jax.Array:
+    return wq.data.astype(jnp.float32) * wq.scale + wq.zero
+
+
+def wq_matmul(x: jax.Array, wq: WeightQ, out_dtype=jnp.bfloat16) -> jax.Array:
+    """x (…, K) fp @ quantized W (K, N) with affine correction.
+
+    y = (x @ q) * scale + rowsum(x) * zero  — the int matmul runs with int8
+    storage; scale/zero fold as rank-1 epilogues so full-precision weights
+    are never materialized in HBM.
+    """
+    xf = x.astype(jnp.float32)
+    core = jnp.einsum("...k,kn->...n", xf, wq.data.astype(jnp.float32))
+    rowsum = jnp.sum(xf, axis=-1, keepdims=True)
+    return (core * wq.scale + rowsum * wq.zero).astype(out_dtype)

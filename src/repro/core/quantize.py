@@ -1,0 +1,123 @@
+"""Quantization primitives (paper Eq. 2) + QAT fake-quant with STE.
+
+The paper quantizes a float `a` to an UNSIGNED q-bit integer:
+
+    a_q = floor((a - a_min) / scale),   scale = (a_max - a_min) / 2**q
+
+clipped to [0, 2**q - 1]. Dequantization is the affine inverse
+`a ≈ a_q * scale + a_min`. All QGTC integer arithmetic operates on the
+unsigned a_q values; affine correction terms recover float semantics for
+matmuls (see `affine_matmul_correction`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantParams",
+    "calibrate",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "affine_matmul_correction",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Affine quantization parameters for one tensor (per-tensor or per-row).
+
+    ``scale`` and ``zero`` (= a_min) may be scalars or arrays broadcastable
+    against the tensor (e.g. per-row scales of shape (M, 1)).
+    """
+
+    nbits: int
+    scale: jax.Array
+    zero: jax.Array  # the a_min offset; quantized 0 maps to this float
+
+    def tree_flatten(self):
+        return (self.scale, self.zero), self.nbits
+
+    @classmethod
+    def tree_unflatten(cls, nbits, leaves):
+        return cls(nbits, *leaves)
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.nbits) - 1
+
+
+def calibrate(x: jax.Array, nbits: int, axis=None, eps: float = 1e-8) -> QuantParams:
+    """Min/max calibration (the paper's empirical a_min/a_max)."""
+    a_min = jnp.min(x, axis=axis, keepdims=axis is not None)
+    a_max = jnp.max(x, axis=axis, keepdims=axis is not None)
+    scale = (a_max - a_min) / (1 << nbits)
+    scale = jnp.maximum(scale, eps)
+    return QuantParams(nbits=nbits, scale=scale, zero=a_min)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Eq. 2: floor((x - a_min)/scale), clipped to the q-bit range, int32."""
+    q = jnp.floor((x - qp.zero) / qp.scale)
+    return jnp.clip(q, 0, qp.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
+    return q.astype(jnp.float32) * qp.scale + qp.zero
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, nbits: int, qp: QuantParams | None = None):
+    """QAT fake-quantization with a straight-through estimator.
+
+    Forward: dequantize(quantize(x)); backward: identity within the clip
+    range, zero outside (standard STE with range gating).
+    """
+    if qp is None:
+        qp = calibrate(x, nbits)
+    return dequantize(quantize(x, qp), qp)
+
+
+def _fake_quant_fwd(x, nbits, qp):
+    if qp is None:
+        qp = calibrate(x, nbits)
+    y = dequantize(quantize(x, qp), qp)
+    in_range = (x >= qp.zero) & (x <= qp.zero + qp.scale * (1 << nbits))
+    return y, in_range
+
+
+def _fake_quant_bwd(nbits, in_range, g):
+    return (jnp.where(in_range, g, 0.0), None)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def affine_matmul_correction(
+    aq: jax.Array,
+    bq: jax.Array,
+    qa: QuantParams,
+    qb: QuantParams,
+    int_prod: jax.Array,
+) -> jax.Array:
+    """Recover the float matmul A@B from the exact integer product Aq@Bq.
+
+    sum_k (aq*s_a + m_a)(bq*s_b + m_b)
+      = s_a s_b * int_prod + s_a m_b * rowsum(aq) + s_b m_a * colsum(bq)
+        + K * m_a m_b
+    Scales/zeros may be per-tensor scalars (broadcast) here.
+    """
+    k = aq.shape[-1]
+    row = jnp.sum(aq, axis=-1, keepdims=True).astype(jnp.float32)
+    col = jnp.sum(bq, axis=-2, keepdims=True).astype(jnp.float32)
+    return (
+        qa.scale * qb.scale * int_prod.astype(jnp.float32)
+        + qa.scale * qb.zero * row
+        + qb.scale * qa.zero * col
+        + k * qa.zero * qb.zero
+    )

@@ -1,0 +1,61 @@
+"""Zero-tile occupancy maps + compaction (paper §4.3 zero-tile jumping).
+
+On GPU the kernel discovers all-zero 8x128 adjacency tiles at runtime with
+uint4 loads + warp ballots. TPUs have no warp primitives, so we precompute
+the per-tile occupancy with an XLA reduce (cheap: one pass over the packed
+1-bit matrix) and hand it to the Pallas kernel via scalar prefetch:
+
+  mask mode    — occupancy (MT, KT) int32; kernel wraps compute in pl.when.
+  compact mode — per m-tile row, the sorted indices of its non-zero k-tiles
+                 padded to max_nnz; the BlockSpec index_map reads this to
+                 skip the DMA of zero tiles entirely (true jumping).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tile_occupancy", "compact_tiles", "occupancy_stats"]
+
+
+def tile_occupancy(a_packed_plane: jax.Array, tile_m: int, tile_w: int) -> jax.Array:
+    """(M, W) uint32 packed 1-bit matrix -> (M/tile_m, W/tile_w) int32 0/1.
+
+    A tile is occupied iff any word in it is non-zero (paper's bitwise-OR
+    reduction). M, W must be padded to tile multiples by the caller.
+    """
+    m, w = a_packed_plane.shape
+    assert m % tile_m == 0 and w % tile_w == 0, (m, w, tile_m, tile_w)
+    t = a_packed_plane.reshape(m // tile_m, tile_m, w // tile_w, tile_w)
+    ored = jax.lax.reduce(
+        t, jnp.uint32(0), jax.lax.bitwise_or, (1, 3)
+    )
+    return (ored != 0).astype(jnp.int32)
+
+
+def compact_tiles(occ: jax.Array):
+    """Occupancy (MT, KT) -> (indices (MT, max_nnz) int32, counts (MT,) int32).
+
+    indices[i, :counts[i]] are the k-tile ids of row i's non-zero tiles in
+    ascending order; the tail is padded with 0 (the kernel masks by count).
+    ``max_nnz`` is the static KT bound — with jit we cannot shrink it
+    data-dependently, but the kernel's grid can be sized to max(counts) when
+    called eagerly (the serving path does exactly that).
+    """
+    mt, kt = occ.shape
+    order = jnp.argsort(-occ, axis=1, stable=True)  # nonzeros first, stable=ascending ids
+    counts = jnp.sum(occ, axis=1).astype(jnp.int32)
+    idx = jnp.where(jnp.arange(kt)[None, :] < counts[:, None], order, 0)
+    return idx.astype(jnp.int32), counts
+
+
+def occupancy_stats(occ: jax.Array) -> dict:
+    total = occ.size
+    nz = int(jnp.sum(occ))
+    return {
+        "tiles_total": int(total),
+        "tiles_nonzero": nz,
+        "tiles_zero": int(total - nz),
+        "nonzero_ratio": nz / max(total, 1),
+        "skip_ratio": 1.0 - nz / max(total, 1),
+    }

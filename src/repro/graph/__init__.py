@@ -1,0 +1,2 @@
+# Graph substrate: partitioning (METIS-substitute), subgraph batching,
+# synthetic Table-1 datasets, bandwidth-optimized packing, CSR utilities.

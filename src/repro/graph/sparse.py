@@ -1,0 +1,102 @@
+"""CSR / edge-list / dense adjacency utilities (host numpy + device jnp).
+
+The device-side ``sparse_to_dense`` is the §4.6 on-device densification:
+ship the sparse edge list over the (slow) host link, scatter into the dense
+binary adjacency on the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSR", "edges_to_csr", "csr_to_dense", "sparse_to_dense", "degrees",
+           "add_self_loops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    indptr: np.ndarray  # (N+1,) int32
+    indices: np.ndarray  # (E,) int32
+    n: int
+
+    @property
+    def e(self) -> int:
+        return int(self.indices.shape[0])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]:self.indptr[v + 1]]
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    def edge_list(self) -> np.ndarray:
+        """(2, E) int32 [src; dst]."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32), np.diff(self.indptr))
+        return np.stack([src, self.indices.astype(np.int32)])
+
+    def subgraph(self, nodes: np.ndarray) -> "CSR":
+        """Induced subgraph with nodes relabeled 0..len-1 (order preserved)."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        remap = -np.ones(self.n, dtype=np.int64)
+        remap[nodes] = np.arange(len(nodes))
+        indptr = [0]
+        out_idx = []
+        for v in nodes:
+            nb = remap[self.neighbors(v)]
+            nb = nb[nb >= 0]
+            out_idx.append(np.sort(nb))
+            indptr.append(indptr[-1] + len(nb))
+        idx = (np.concatenate(out_idx) if out_idx else np.zeros(0)).astype(np.int32)
+        return CSR(np.asarray(indptr, np.int32), idx, len(nodes))
+
+
+def edges_to_csr(edges: np.ndarray, n: int, symmetrize: bool = True) -> CSR:
+    """(2, E) -> CSR; dedups; optionally adds reverse edges."""
+    src, dst = edges[0].astype(np.int64), edges[1].astype(np.int64)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    keep = src != dst  # no self loops in storage; added explicitly later
+    src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    key = np.unique(key)
+    src, dst = (key // n).astype(np.int32), (key % n).astype(np.int32)
+    indptr = np.zeros(n + 1, dtype=np.int32)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr, dtype=np.int32)
+    return CSR(indptr, dst, n)
+
+
+def csr_to_dense(csr: CSR) -> np.ndarray:
+    a = np.zeros((csr.n, csr.n), dtype=np.int32)
+    el = csr.edge_list()
+    a[el[0], el[1]] = 1
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sparse_to_dense(edges: jax.Array, n: int) -> jax.Array:
+    """Device-side scatter: (2, E) int32 edge list -> (n, n) int32 0/1.
+
+    Padded/invalid edges may be encoded as src == -1 (dropped via clamp to a
+    scratch row that is sliced away).
+    """
+    src, dst = edges[0], edges[1]
+    valid = src >= 0
+    src = jnp.where(valid, src, n)  # scratch row n
+    dst = jnp.where(valid, dst, 0)
+    a = jnp.zeros((n + 1, n), jnp.int32)
+    a = a.at[src, dst].max(1)
+    return a[:n]
+
+
+def degrees(adj_dense: jax.Array) -> jax.Array:
+    return jnp.sum(adj_dense, axis=1)
+
+
+def add_self_loops(adj_dense: jax.Array) -> jax.Array:
+    n = adj_dense.shape[0]
+    return jnp.maximum(adj_dense, jnp.eye(n, dtype=adj_dense.dtype))

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: 1-bit GEMM by AND+popcount (paper §3 Eq. 7, §4.3).
+
+Computes C = A @ B where A and B are binary matrices stored 32-bits/word
+packed along the reduction dim:
+
+    A_packed (M, W) uint32,  B_packed (W, N) uint32,  C (M, N) int32
+    C[m, n] = sum_w popcount(A[m, w] & B[w, n])       (W = K/32 words)
+
+Two compute modes (TPU hardware adaptation of the 1-bit Tensor Core):
+  'vpu' — bit-serial: one (BM, BN) popcount(AND) VPU op per packed word.
+          Each int32 op carries 32 bit-MACs; HBM traffic is the 1-bit
+          packed footprint. This is the direct analogue of b1 WMMA.
+  'mxu' — unpack bit-planes to int8 inside VMEM and issue one int8 MXU dot
+          per tile. Trades VMEM space (32x expansion, on-chip only) for MXU
+          throughput; HBM traffic is unchanged (still packed).
+
+Zero-tile jumping (paper §4.3), two TPU modes:
+  mask    — per-tile occupancy via scalar-prefetch SMEM; all-zero tiles skip
+            the FLOPs (pl.when) but their DMA still lands.
+  compact — the K grid dimension is sized to the max non-zero tile count and
+            a prefetched index array remaps BlockSpec index_maps, so zero
+            tiles are neither loaded nor computed (true jumping).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_W = 32  # 32 words = 1024 K-bits per tile
+
+
+def _tile_product(a, b, mode: str):
+    """(BM, BW) uint32 x (BW, BN) uint32 -> (BM, BN) int32 popcount GEMM."""
+    bm, bw = a.shape
+    bn = b.shape[1]
+    if mode == "vpu":
+        def body(w, acc):
+            aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)  # (BM, 1)
+            bw_ = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=0)  # (1, BN)
+            return acc + jax.lax.population_count(aw & bw_).astype(jnp.int32)
+        return jax.lax.fori_loop(0, bw, body, jnp.zeros((bm, bn), jnp.int32))
+    if mode == "mxu":
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        a_bits = ((a[:, :, None] >> shifts[None, None, :]) & 1).astype(jnp.int8)
+        a_bits = a_bits.reshape(bm, bw * 32)
+        b_bits = ((b[:, None, :] >> shifts[None, :, None]) & 1).astype(jnp.int8)
+        b_bits = b_bits.reshape(bw * 32, bn)
+        return jax.lax.dot_general(
+            a_bits, b_bits, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _kernel_plain(a_ref, b_ref, o_ref, *, mode):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+
+def _kernel_mask(occ_ref, a_ref, b_ref, o_ref, *, mode):
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(occ_ref[i, k] != 0)
+    def _compute():
+        o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+
+def _kernel_compact(idx_ref, cnt_ref, a_ref, b_ref, o_ref, *, mode):
+    i, s = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(s < cnt_ref[i])
+    def _compute():
+        o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+
+def bgemm(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_w: int = DEFAULT_BLOCK_W,
+    mode: str = "vpu",
+    occupancy: jax.Array | None = None,
+    compact: tuple[jax.Array, jax.Array, int] | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """1-bit GEMM. Shapes must be pre-padded to block multiples (ops.py pads).
+
+    occupancy: (MT, KT) int32 0/1 -> mask-mode jumping.
+    compact: (idx (MT, S), cnt (MT,), S) -> compact-mode jumping.
+    """
+    m, w = a_packed.shape
+    w2, n = b_packed.shape
+    assert w == w2, (a_packed.shape, b_packed.shape)
+    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0, (
+        m, n, w, block_m, block_n, block_w)
+    mt, nt, kt = m // block_m, n // block_n, w // block_w
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.int32)
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, k, *_: (i, j))
+
+    if compact is not None:
+        idx, cnt, s_max = compact
+        a_spec = pl.BlockSpec((block_m, block_w), lambda i, j, s, idx_r, cnt_r: (i, idx_r[i, s]))
+        b_spec = pl.BlockSpec((block_w, block_n), lambda i, j, s, idx_r, cnt_r: (idx_r[i, s], j))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(mt, nt, s_max),
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+        )
+        kern = functools.partial(_kernel_compact, mode=mode)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(idx, cnt, a_packed, b_packed)
+
+    a_spec = pl.BlockSpec((block_m, block_w), lambda i, j, k, *_: (i, k))
+    b_spec = pl.BlockSpec((block_w, block_n), lambda i, j, k, *_: (k, j))
+    if occupancy is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(mt, nt, kt),
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+        )
+        kern = functools.partial(_kernel_mask, mode=mode)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(occupancy, a_packed, b_packed)
+
+    kern = functools.partial(_kernel_plain, mode=mode)
+    return pl.pallas_call(
+        kern,
+        grid=(mt, nt, kt),
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a_packed, b_packed)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: any-bitwidth GEMM by 1-bit composition (paper §3, §4.4).
+
+    A_packed (s, M, W) uint32  x  B_packed (t, W, N) uint32  ->  C (M, N) int32
+    C = sum_{i<s, j<t} 2^(i+j) * popcount_gemm(A_i, B_j)
+
+Non-zero tile reuse (§4.4 "cross-tile reduction") is structural here: for a
+given (m, k) grid step the A tile words are DMA'd into VMEM once and the
+loop over the s*t bit-plane pairs happens *inside* the kernel body, so tile
+loads are O(1) in the bitwidth instead of O(s*t).
+
+``bitserial_fused`` adds the §4.5 inter-layer epilogue: on the last K step
+the int32 accumulator is rescaled (alpha per-row — e.g. 1/degree for GNN
+aggregation — and beta per-column, e.g. folded BatchNorm), ReLU'd, and
+requantized to ``out_bits`` unsigned values, never round-tripping fp32
+activations through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.bgemm import _tile_product
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_W = 32
+
+
+def _plane_accumulate(a_ref, b_ref, mode):
+    """Accumulate all s*t shifted plane products for the resident tiles."""
+    s, t = a_ref.shape[0], b_ref.shape[0]
+    bm, bn = a_ref.shape[1], b_ref.shape[2]
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for i in range(s):          # static unroll: bit-planes of A
+        a_i = a_ref[i]          # A tile loaded once, reused across j (§4.4)
+        for j in range(t):      # static unroll: bit-planes of B
+            acc = acc + (_tile_product(a_i, b_ref[j], mode) << (i + j))
+    return acc
+
+
+def _kernel(a_ref, b_ref, o_ref, *, mode):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
+
+
+def _kernel_fused(a_ref, b_ref, alpha_ref, beta_ref, o_ref, acc_ref, *, mode,
+                  out_bits, relu, kt):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
+
+    @pl.when(k == kt - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * alpha_ref[...] + beta_ref[...]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        q = jnp.clip(jnp.floor(y), 0.0, float((1 << out_bits) - 1))
+        o_ref[...] = q.astype(jnp.int32)
+
+
+def bitserial_gemm(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_w: int = DEFAULT_BLOCK_W,
+    mode: str = "vpu",
+    interpret: bool = False,
+) -> jax.Array:
+    s, m, w = a_packed.shape
+    t, w2, n = b_packed.shape
+    assert w == w2
+    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0
+    mt, nt, kt = m // block_m, n // block_n, w // block_w
+    return pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((s, block_m, block_w), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((t, block_w, block_n), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_packed, b_packed)
+
+
+def bitserial_fused(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    alpha: jax.Array,  # (M, 1) f32 per-row scale (e.g. 1/degree)
+    beta: jax.Array,   # (1, N) f32 per-col bias (e.g. folded BN)
+    *,
+    out_bits: int,
+    relu: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_w: int = DEFAULT_BLOCK_W,
+    mode: str = "vpu",
+    interpret: bool = False,
+) -> jax.Array:
+    s, m, w = a_packed.shape
+    t, w2, n = b_packed.shape
+    assert w == w2 and alpha.shape == (m, 1) and beta.shape == (1, n)
+    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0
+    mt, nt, kt = m // block_m, n // block_n, w // block_w
+    return pl.pallas_call(
+        functools.partial(_kernel_fused, mode=mode, out_bits=out_bits,
+                          relu=relu, kt=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((s, block_m, block_w), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((t, block_w, block_n), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(a_packed, b_packed, alpha, beta)

@@ -1,0 +1,176 @@
+"""jit'd public wrappers around the Pallas kernels: padding, jump-mode
+plumbing, output cropping, and CPU-interpret dispatch.
+
+On CPU backends the kernels execute under interpret=True (Python semantics,
+exact); on TPU they compile to Mosaic. All wrappers are shape-polymorphic
+over inputs but keep block sizes static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, zerotile
+from repro.kernels import bgemm as _bgemm
+from repro.kernels import bitpack as _bitpack
+from repro.kernels import bitserial as _bitserial
+from repro.kernels import wqmm as _wqmm
+
+__all__ = ["bgemm", "bitserial_gemm", "bitserial_fused", "bitpack",
+           "wq_gemm", "auto_interpret"]
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, bm, bw, axes=(0, 1)):
+    x = bitops.pad_to(x, axes[0], bm)
+    return bitops.pad_to(x, axes[1], bw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
+                                             "mode", "jump", "interpret"))
+def bgemm(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    block_m: int = 8,
+    block_n: int = 128,
+    block_w: int = 4,
+    mode: str = "vpu",
+    jump: str = "none",  # none | mask | compact
+    interpret: bool | None = None,
+) -> jax.Array:
+    """1-bit GEMM (M,W)x(W,N)->int32 with optional zero-tile jumping."""
+    if interpret is None:
+        interpret = auto_interpret()
+    m, _ = a_packed.shape
+    _, n = b_packed.shape
+    a = _pad2(a_packed, block_m, block_w)
+    b = _pad2(b_packed, block_w, block_n)
+    kwargs = dict(block_m=block_m, block_n=block_n, block_w=block_w,
+                  mode=mode, interpret=interpret)
+    if jump == "mask":
+        occ = zerotile.tile_occupancy(a, block_m, block_w)
+        out = _bgemm.bgemm(a, b, occupancy=occ, **kwargs)
+    elif jump == "compact":
+        occ = zerotile.tile_occupancy(a, block_m, block_w)
+        idx, cnt = zerotile.compact_tiles(occ)
+        out = _bgemm.bgemm(a, b, compact=(idx, cnt, occ.shape[1]), **kwargs)
+    else:
+        out = _bgemm.bgemm(a, b, **kwargs)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
+                                             "mode", "interpret"))
+def bitserial_gemm(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    block_m: int = 8,
+    block_n: int = 128,
+    block_w: int = 4,
+    mode: str = "vpu",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM."""
+    if interpret is None:
+        interpret = auto_interpret()
+    _, m, _ = a_packed.shape
+    _, _, n = b_packed.shape
+    a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
+    b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
+    out = _bitserial.bitserial_gemm(a, b, block_m=block_m, block_n=block_n,
+                                    block_w=block_w, mode=mode, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("out_bits", "relu", "block_m",
+                                             "block_n", "block_w", "mode",
+                                             "interpret"))
+def bitserial_fused(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+    *,
+    out_bits: int,
+    relu: bool = True,
+    block_m: int = 8,
+    block_n: int = 128,
+    block_w: int = 4,
+    mode: str = "vpu",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5)."""
+    if interpret is None:
+        interpret = auto_interpret()
+    _, m, _ = a_packed.shape
+    _, _, n = b_packed.shape
+    a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
+    b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
+    al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
+    be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
+    out = _bitserial.bitserial_fused(a, b, al, be, out_bits=out_bits, relu=relu,
+                                     block_m=block_m, block_n=block_n,
+                                     block_w=block_w, mode=mode,
+                                     interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_w",
+                                             "interpret"))
+def bitpack(
+    x: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    *,
+    nbits: int,
+    block_m: int = 8,
+    block_w: int = 4,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Quantize + pack (M,K) f32 -> (nbits, M_pad, ceil(K/32)) uint32.
+
+    Output keeps the padded M (callers crop); the word axis reflects K
+    padded to the block boundary (zero words — harmless for GEMM).
+    """
+    if interpret is None:
+        interpret = auto_interpret()
+    m, k = x.shape
+    xp = _pad2(x, block_m, block_w * 32)
+    out = _bitpack.bitpack(xp, scale, zero, nbits, k_true=k, block_m=block_m,
+                           block_w=block_w, interpret=interpret)
+    return out[:, :m, :]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def wq_gemm(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scales: jax.Array,
+    *,
+    group: int = 32,
+    block_m: int = 8,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x (M,K) @ 4-bit packed W (K,N) -> f32 (M,N), dequant inside VMEM."""
+    if interpret is None:
+        interpret = auto_interpret()
+    m, k = x.shape
+    n = w_packed.shape[1] * 2
+    xp = _pad2(x, block_m, block_k)
+    kp = xp.shape[1]
+    wp = bitops.pad_to(bitops.pad_to(w_packed, 0, block_k), 1, block_n // 2)
+    sp = bitops.pad_to(bitops.pad_to(scales, 0, block_k // group), 1, block_n)
+    out = _wqmm.wq_gemm(xp, wp, sp, group=group, block_m=block_m,
+                        block_n=block_n, block_k=block_k,
+                        interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes exactly what the corresponding kernel computes,
+including padding semantics, so tests can assert exact integer equality.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.quantize import QuantParams, quantize
+
+__all__ = ["bgemm_ref", "bitserial_gemm_ref", "bitserial_fused_ref",
+           "bitpack_ref", "wq_gemm_ref"]
+
+
+def bgemm_ref(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """1-bit GEMM oracle: (M,W) uint32 x (W,N) uint32 -> (M,N) int32."""
+    return bitops.popcount_matmul_packed(a_packed, b_packed)
+
+
+def bitserial_gemm_ref(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """(s,M,W) x (t,W,N) -> exact int32 (M,N)."""
+    return bitops.bitserial_matmul_packed(a_packed, b_packed)
+
+
+def bitserial_fused_ref(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    alpha: jax.Array,
+    beta: jax.Array,
+    out_bits: int,
+    relu: bool = True,
+) -> jax.Array:
+    """Fused epilogue oracle: int32 acc -> alpha*acc+beta -> relu -> quantize.
+
+    alpha/beta broadcast over (M, N); output is the unsigned ``out_bits``
+    quantized int32 (NOT packed — packing is bitpack's job / fused variant).
+    """
+    acc = bitserial_gemm_ref(a_packed, b_packed).astype(jnp.float32)
+    y = acc * alpha + beta
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return jnp.clip(jnp.floor(y), 0, (1 << out_bits) - 1).astype(jnp.int32)
+
+
+def bitpack_ref(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Quantize (Eq. 2) + 3D-stacked pack: (M,K) f32 -> (nbits, M, ceil(K/32)) uint32."""
+    q = quantize(x, qp)
+    return bitops.pack_a(q, qp.nbits)
+
+
+def wq_gemm_ref(x: jax.Array, w_packed: jax.Array, scales: jax.Array,
+                group: int = 32) -> jax.Array:
+    """4-bit weight-only matmul oracle (kernels/wqmm.py layout)."""
+    k, n_half = w_packed.shape
+    n = n_half * 2
+    q = w_packed.astype(jnp.int32)
+    lo = (q & 0xF) - 8
+    hi = ((q >> 4) & 0xF) - 8
+    w = jnp.stack([lo, hi], axis=-1).reshape(k, n).astype(jnp.float32)
+    w = w * jnp.repeat(scales, group, axis=0)
+    return x.astype(jnp.float32) @ w

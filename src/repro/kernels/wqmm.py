@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: 4-bit weight-only quantized matmul (decode GEMV/GEMM).
+
+    x (M, K) bf16/f32  @  W4 packed (K, N/2) uint8 (+ per-group scales)
+      -> (M, N) f32
+
+The QGTC bit-compression idea applied to the LM decode bottleneck: weights
+stream HBM->VMEM at 4 bits (plus bf16 group scales), are unpacked to the
+MXU operand INSIDE VMEM, and never exist in HBM at full precision. Packing
+follows the KV-cache convention (transformer._kv_quant): two nibbles per
+byte along N, values stored as q+8 in [1,15], per-(K-group, column) scales.
+
+Layout:
+  w_packed (K, N//2) uint8   — nibble i of byte j holds column 2j+i
+  scales   (K//G, N) f32     — symmetric per-group scale (G = group size)
+
+Block mapping: grid (M/BM, N/BN, K/BK); the packed block is (BK, BN//2);
+the scales block is (BK//G, BN). Accumulation in f32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_M = 8
+DEFAULT_BLOCK_N = 256   # packed: 128 bytes wide
+DEFAULT_BLOCK_K = 128
+
+
+def _unpack_w4(wp, scale, bk, bn, group):
+    """(BK, BN//2) uint8 + (BK//G, BN) f32 -> (BK, BN) f32 dequantized."""
+    q = wp.astype(jnp.int32)
+    lo = (q & 0xF) - 8
+    hi = ((q >> 4) & 0xF) - 8
+    w = jnp.stack([lo, hi], axis=-1).reshape(bk, bn)
+    s = jnp.repeat(scale, group, axis=0)       # (BK, BN)
+    return w.astype(jnp.float32) * s
+
+
+def _kernel(x_ref, wp_ref, s_ref, o_ref, acc_ref, *, group, kt):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk = wp_ref.shape[0]
+    bn = wp_ref.shape[1] * 2
+    w = _unpack_w4(wp_ref[...], s_ref[...], bk, bn, group)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == kt - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def wq_gemm(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scales: jax.Array,
+    *,
+    group: int = 32,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Shapes must be pre-padded to block multiples (ops.py pads)."""
+    m, k = x.shape
+    k2, n_half = w_packed.shape
+    n = n_half * 2
+    assert k == k2, (x.shape, w_packed.shape)
+    assert scales.shape == (k // group, n), (scales.shape, k, group, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert block_k % group == 0
+    mt, nt, kt = m // block_m, n // block_n, k // block_k
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group, kt=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n // 2), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // group, block_n),
+                         lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, scales)
+
+
+def pack_w4(w: jax.Array, group: int = 32):
+    """(K, N) float -> (packed (K, N//2) uint8, scales (K//G, N) f32).
+
+    Symmetric per-(K-group, column) quantization to [-7, 7].
+    """
+    k, n = w.shape
+    assert n % 2 == 0 and k % group == 0, (w.shape, group)
+    wg = w.reshape(k // group, group, n).astype(jnp.float32)
+    s = jnp.max(jnp.abs(wg), axis=1) / 7.0 + 1e-8        # (K/G, N)
+    q = jnp.clip(jnp.round(wg / s[:, None, :]), -7, 7).astype(jnp.int32) + 8
+    q = q.reshape(k, n)
+    packed = (q[:, 0::2] | (q[:, 1::2] << 4)).astype(jnp.uint8)
+    return packed, s

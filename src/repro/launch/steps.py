@@ -1,0 +1,259 @@
+"""Step-function factories shared by train.py / serve.py / dryrun.py.
+
+Everything here is mesh-agnostic: callers pick a mesh + logical rules and
+get jit-able functions plus matching NamedSharding trees for params,
+optimizer state, batches, and decode caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist import sharding as shd
+from repro.models import lm
+from repro.train import optimizer as opt
+
+__all__ = ["abstract_params", "abstract_opt_state", "abstract_cache",
+           "make_train_step", "make_prefill_fn", "make_decode_fn",
+           "param_shardings", "batch_shardings", "cache_shardings",
+           "count_params"]
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct params tree, logical-axes tree) — no allocation."""
+    holder = {}
+
+    def f(k):
+        p, a = lm.init_lm(k, cfg)
+        holder["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(seed))
+    return shapes, holder["axes"]
+
+
+def abstract_opt_state(params_shapes):
+    return jax.eval_shape(opt.adamw_init, params_shapes)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    holder = {}
+
+    def f():
+        c, a = lm.init_decode_cache(cfg, batch, max_seq)
+        holder["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, holder["axes"]
+
+
+def count_params(params_shapes) -> int:
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params_shapes)))
+
+
+# ------------------------------------------------------------------ sharding
+
+def param_shardings(mesh, rules, axes_tree, shapes_tree=None):
+    """Logical axes -> NamedSharding; with shapes, drops mesh axes that do
+    not divide a dim (e.g. a 1-head reduced config on a >1 'model' axis)."""
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda a: shd.named_sharding(mesh, a, rules), axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def one(a, leaf):
+        spec = [rules.get(n) if n else None for n in a]
+        for i in range(len(spec)):
+            if spec[i] is not None and \
+                    leaf.shape[i] % _axis_size(mesh, spec[i]) != 0:
+                spec[i] = None
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_shardings(mesh, rules, axes_tree, shapes_tree=None):
+    p = param_shardings(mesh, rules, axes_tree, shapes_tree)
+    return {"mu": p, "nu": p, "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(cfg: ModelConfig, mesh, rules):
+    dp = rules.get("batch")
+    tok = NamedSharding(mesh, P(dp, None))
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        out["patches"] = NamedSharding(mesh, P(dp, None, None))
+    if cfg.family == "audio_encdec":
+        out["frames"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def cache_shardings(mesh, rules, cache_axes, cache_shapes):
+    """Shape-aware cache shardings.
+
+    Drops mesh axes that do not divide a dim (e.g. GQA kv_heads=8 on a
+    16-way 'model' axis), then — for KV caches that lost their 'model'
+    shard — moves 'model' onto the sequence dim instead (flash-decoding
+    style split-KV: softmax/psum over the sharded context is cheap, and
+    the cache stays 256-way sharded).
+    """
+    def one(a, leaf):
+        if a == ():
+            return NamedSharding(mesh, P())
+        shape = leaf.shape
+        spec = [rules.get(n) if n else None for n in a]
+        for i in range(len(spec)):
+            if spec[i] is not None and shape[i] % _axis_size(mesh, spec[i]) != 0:
+                spec[i] = None
+        used: set = set()
+        for ax in spec:
+            if ax:
+                used.update([ax] if isinstance(ax, str) else ax)
+        if "model" not in used and mesh.shape.get("model", 1) > 1 \
+                and "cache_seq" in a:
+            i = a.index("cache_seq")
+            cur = spec[i]
+            cand = tuple(cur) if isinstance(cur, (tuple, list)) else \
+                ((cur,) if cur else ())
+            cand = cand + ("model",)
+            if shape[i] % _axis_size(mesh, cand) == 0:
+                spec[i] = cand if len(cand) > 1 else cand[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_axes, cache_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# --------------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig,
+                    q_chunk: int = 1024, t_chunk: int = 512,
+                    n_micro: int = 1):
+    """n_micro > 1: gradient-accumulation microbatching — the global batch
+    splits into n_micro sequential microbatches inside one jit step.
+    Peak activation memory (saved residuals + transients) scales 1/n_micro;
+    per-layer FSDP weight gathers repeat n_micro times (memory<->ICI
+    trade recorded in EXPERIMENTS.md §Perf)."""
+
+    def grad_fn(params, b):
+        return jax.value_and_grad(lm.lm_loss, has_aux=True)(
+            params, b, cfg, q_chunk=q_chunk, t_chunk=t_chunk)
+
+    def train_step(params, ostate, batch):
+        if n_micro == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, b_i):
+                g_acc, l_acc = acc
+                (l, _), g = grad_fn(params, b_i)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            with jax.named_scope("micro_scan"):
+                (g_sum, l_sum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            loss = l_sum / n_micro
+            aux = {"tokens": jnp.asarray(
+                batch["tokens"].size, jnp.int32)}
+        params, ostate = opt.adamw_update(params, grads, ostate, ocfg)
+        metrics = {"loss": loss, "tokens": aux["tokens"]}
+        return params, ostate, metrics
+
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, max_seq: int, q_chunk: int = 1024):
+    def prefill_fn(params, batch):
+        return lm.prefill(params, batch, cfg, max_seq=max_seq,
+                          q_chunk=q_chunk)
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg)
+
+    return decode_fn
+
+
+# ----------------------------------------------------- lowering entry points
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               q_chunk: int = 1024, t_chunk: int = 512,
+               donate: bool = True, zero3: bool = False,
+               n_micro: int = 1):
+    """Lower the right step for (cfg, shape) on `mesh`.
+
+    Returns (lowered, meta). train -> train_step; prefill -> prefill;
+    decode -> decode_step with a seq-long cache.
+    """
+    multi_pod = "pod" in mesh.axis_names
+    cp = shape.name == "long_500k"
+    mode = "train" if shape.kind == "train" else "serve"
+    rules = shd.make_rules(mode, multi_pod=multi_pod, context_parallel=cp,
+                           zero3=zero3)
+    p_shapes, p_axes = abstract_params(cfg)
+    p_sh = param_shardings(mesh, rules, p_axes, p_shapes)
+    n_params = count_params(p_shapes)
+    meta = {"n_params": n_params, "mode": mode, "rules_cp": cp}
+
+    with shd.shard_ctx(mesh, rules):
+        if shape.kind == "train":
+            o_shapes = abstract_opt_state(p_shapes)
+            o_sh = opt_shardings(mesh, rules, p_axes, p_shapes)
+            b_sh = batch_shardings(cfg, mesh, rules)
+            batch = lm.input_specs(cfg, shape)
+            step = make_train_step(cfg, opt.AdamWConfig(lr=1e-4),
+                                   q_chunk=q_chunk, t_chunk=t_chunk,
+                                   n_micro=n_micro)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(p_shapes, o_shapes, batch)
+        elif shape.kind == "prefill":
+            batch = lm.input_specs(cfg, shape)
+            b_sh = {k: v for k, v in batch_shardings(cfg, mesh, rules).items()
+                    if k in batch}
+            c_shapes, c_axes = abstract_cache(cfg, shape.batch, shape.seq)
+            c_sh = cache_shardings(mesh, rules, c_axes, c_shapes)
+            fn = make_prefill_fn(cfg, max_seq=shape.seq, q_chunk=q_chunk)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, c_sh))
+            lowered = jitted.lower(p_shapes, batch)
+        else:  # decode
+            tok_spec, c_shapes = lm.input_specs(cfg, shape)
+            _, c_axes = abstract_cache(cfg, shape.batch, shape.seq)
+            c_sh = cache_shardings(mesh, rules, c_axes, c_shapes)
+            tok_sh = NamedSharding(mesh, P(rules.get("batch"), None))
+            fn = make_decode_fn(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_shapes, c_shapes, tok_spec["tokens"])
+    return lowered, meta

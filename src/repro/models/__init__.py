@@ -1,0 +1,2 @@
+# Model zoo: the paper's GNNs (gnn.py) + the assigned LM architectures
+# (transformer.py / ssm.py / lm.py / multimodal stubs).

@@ -1,0 +1,209 @@
+"""GNN models: Cluster-GCN and Batched GIN (paper §6.1 benchmarks).
+
+Each model has three execution paths sharing one parameter pytree:
+
+  fp32_dense — dense-adjacency fp32 matmuls (the "DGL dense" baseline)
+  fp32_csr   — gather/segment-sum aggregation over the edge list (the
+               DGL/PyG scatter-kernel analogue)
+  qgtc       — the paper's path: binary adjacency, any-bit quantized
+               activations/weights, integer bit-serial GEMMs with float
+               rescale epilogues (Algorithm 1 + §4.5). Hidden layers
+               requantize; only the final layer emits full precision.
+
+QAT (fake-quant, STE) runs on the fp32 graph; the integer path consumes the
+same weights post-quantization, and tests assert the two agree within
+accumulated rounding.
+
+Model settings follow the paper: Cluster-GCN updates-then-aggregates
+(X' = Â (X W), 3 layers, 16 hidden); GIN aggregates-then-updates with a
+2-layer MLP (3 layers, 64 hidden).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.qgemm import qgemm
+from repro.core.quantize import QuantParams, calibrate, fake_quant, quantize
+
+__all__ = ["GNNConfig", "init_params", "forward", "forward_qgtc", "quantize_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    model: str = "gcn"  # gcn | gin
+    in_dim: int = 128
+    hidden: int = 16
+    n_classes: int = 40
+    layers: int = 3
+    x_bits: int = 8  # activation bits (paper's s)
+    w_bits: int = 8  # weight bits (paper's t)
+    gin_eps: float = 0.0
+    impl: str = "dot"  # integer GEMM impl: dot | popcount | pallas
+
+    @staticmethod
+    def paper_gcn(in_dim: int, n_classes: int, x_bits=8, w_bits=8) -> "GNNConfig":
+        return GNNConfig("gcn", in_dim, 16, n_classes, 3, x_bits, w_bits)
+
+    @staticmethod
+    def paper_gin(in_dim: int, n_classes: int, x_bits=8, w_bits=8) -> "GNNConfig":
+        return GNNConfig("gin", in_dim, 64, n_classes, 3, x_bits, w_bits)
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    s = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, jnp.float32) * s
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> dict:
+    dims = [cfg.in_dim] + [cfg.hidden] * (cfg.layers - 1) + [cfg.n_classes]
+    params = {}
+    keys = jax.random.split(key, cfg.layers * 2)
+    for l in range(cfg.layers):
+        d_in, d_out = dims[l], dims[l + 1]
+        if cfg.model == "gin":
+            params[f"layer{l}"] = {
+                "w1": _glorot(keys[2 * l], (d_in, max(d_out, cfg.hidden))),
+                "b1": jnp.zeros((max(d_out, cfg.hidden),), jnp.float32),
+                "w2": _glorot(keys[2 * l + 1], (max(d_out, cfg.hidden), d_out)),
+                "b2": jnp.zeros((d_out,), jnp.float32),
+                "eps": jnp.asarray(cfg.gin_eps, jnp.float32),
+            }
+        else:
+            params[f"layer{l}"] = {
+                "w": _glorot(keys[2 * l], (d_in, d_out)),
+                "b": jnp.zeros((d_out,), jnp.float32),
+            }
+    return params
+
+
+# ---------------------------------------------------------------- fp32 paths
+
+def _aggregate_dense(adj_bin: jax.Array, h: jax.Array, inv_deg: jax.Array) -> jax.Array:
+    """Â h with Â = (D+I)^-1 (A+I); adj_bin excludes self loops."""
+    return (adj_bin.astype(h.dtype) @ h + h) * inv_deg
+
+
+def _aggregate_csr(edges: jax.Array, h: jax.Array, inv_deg: jax.Array) -> jax.Array:
+    src, dst = edges[0], edges[1]
+    valid = (src >= 0)[:, None]
+    msgs = jnp.where(valid, h[jnp.clip(src, 0)], 0.0)
+    agg = jnp.zeros_like(h).at[jnp.clip(dst, 0)].add(msgs)
+    return (agg + h) * inv_deg
+
+
+def forward(
+    params: dict,
+    adj_or_edges: jax.Array,
+    x: jax.Array,
+    inv_deg: jax.Array,
+    cfg: GNNConfig,
+    path: str = "fp32_dense",
+    fake_bits: bool = False,
+) -> jax.Array:
+    """fp32 forward (optionally QAT-fake-quantized). inv_deg: (N, 1)."""
+    agg = _aggregate_dense if path == "fp32_dense" else _aggregate_csr
+    h = x
+    for l in range(cfg.layers):
+        p = params[f"layer{l}"]
+        last = l == cfg.layers - 1
+        if fake_bits:
+            h = fake_quant(h, cfg.x_bits)
+        if cfg.model == "gin":
+            w1 = fake_quant(p["w1"], cfg.w_bits) if fake_bits else p["w1"]
+            w2 = fake_quant(p["w2"], cfg.w_bits) if fake_bits else p["w2"]
+            a = agg(adj_or_edges, h, inv_deg) + p["eps"] * h
+            if fake_bits:
+                a = fake_quant(a, cfg.x_bits)
+            h = jax.nn.relu(a @ w1 + p["b1"])
+            if fake_bits:
+                h = fake_quant(h, cfg.x_bits)
+            h = h @ w2 + p["b2"]
+        else:  # cluster-GCN: update THEN aggregate (paper §6.2)
+            w = fake_quant(p["w"], cfg.w_bits) if fake_bits else p["w"]
+            u = h @ w + p["b"]
+            h = agg(adj_or_edges, u, inv_deg)
+        if not last:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------- QGTC path
+
+def quantize_params(params: dict, cfg: GNNConfig) -> dict:
+    """Post-QAT weight quantization: int values + QuantParams per matrix."""
+    out = {}
+    for name, p in params.items():
+        q = {}
+        for k, v in p.items():
+            if k.startswith("w"):
+                qp = calibrate(v, cfg.w_bits)
+                q[k] = (quantize(v, qp), qp)
+            else:
+                q[k] = v
+        out[name] = q
+    return out
+
+
+def _qgemm_affine(xq, wq_pair, qpx: QuantParams, cfg: GNNConfig) -> jax.Array:
+    """Integer GEMM + affine correction -> float result of x @ w."""
+    wq, qpw = wq_pair
+    prod = qgemm(xq, wq, qpx.nbits, qpw.nbits, impl=cfg.impl)
+    rowsum = jnp.sum(xq, axis=-1, keepdims=True).astype(jnp.float32)
+    colsum = jnp.sum(wq, axis=-2, keepdims=True).astype(jnp.float32)
+    k = xq.shape[-1]
+    return (qpx.scale * qpw.scale * prod.astype(jnp.float32)
+            + qpx.scale * qpw.zero * rowsum
+            + qpw.scale * qpx.zero * colsum
+            + k * qpx.zero * qpw.zero)
+
+
+def _agg_binary(adj_bin: jax.Array, hq: jax.Array, qph: QuantParams,
+                inv_deg: jax.Array, cfg: GNNConfig) -> jax.Array:
+    """Â h via 1-bit x s-bit integer GEMM + dequant epilogue (Algorithm 1)."""
+    cnt = qgemm(adj_bin, hq, 1, qph.nbits, impl=cfg.impl)  # exact sums of hq
+    deg = jnp.sum(adj_bin, axis=1, keepdims=True).astype(jnp.float32)
+    # dequant: sum(h) = scale * sum(hq) + deg * zero ; then + self, * inv_deg
+    hf = hq.astype(jnp.float32) * qph.scale + qph.zero
+    agg = cnt.astype(jnp.float32) * qph.scale + deg * qph.zero
+    return (agg + hf) * inv_deg
+
+
+def _requant(h: jax.Array, bits: int):
+    qp = calibrate(h, bits)
+    return quantize(h, qp), qp
+
+
+def forward_qgtc(
+    qparams: dict,
+    adj_bin: jax.Array,
+    x: jax.Array,
+    inv_deg: jax.Array,
+    cfg: GNNConfig,
+) -> jax.Array:
+    """Integer-domain forward (serving path). adj_bin: (N,N) 0/1 int32."""
+    hq, qph = _requant(x, cfg.x_bits)
+    for l in range(cfg.layers):
+        p = qparams[f"layer{l}"]
+        last = l == cfg.layers - 1
+        if cfg.model == "gin":
+            a = _agg_binary(adj_bin, hq, qph, inv_deg, cfg)
+            hf = hq.astype(jnp.float32) * qph.scale + qph.zero
+            a = a + p["eps"] * hf
+            aq, qpa = _requant(a, cfg.x_bits)
+            u = jax.nn.relu(_qgemm_affine(aq, p["w1"], qpa, cfg) + p["b1"])
+            uq, qpu = _requant(u, cfg.x_bits)
+            h = _qgemm_affine(uq, p["w2"], qpu, cfg) + p["b2"]
+        else:
+            u = _qgemm_affine(hq, p["w"], qph, cfg) + p["b"]
+            uq, qpu = _requant(u, cfg.x_bits)
+            h = _agg_binary(adj_bin, uq, qpu, inv_deg, cfg)
+        if not last:
+            h = jax.nn.relu(h)
+            hq, qph = _requant(h, cfg.x_bits)  # §4.5: requantize between layers
+    return h

@@ -1,0 +1,90 @@
+"""Shared NN layers for the LM zoo (functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+__all__ = ["rms_norm", "layer_norm", "rope", "apply_rope", "dense",
+           "cross_entropy", "Initializer"]
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def rope(positions: jax.Array, d_head: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,T) -> cos/sin (...,T, d_head//2) fp32."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B,T,H,dh); cos/sin (B,T,half) or (T,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
+    """Masked token CE; labels < 0 are padding. Returns (loss, n_tokens)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    valid = labels >= 0
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / n, n
+
+
+class Initializer:
+    """Deterministic param factory that records logical sharding axes."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self.axes: dict = {}
+
+    def _next(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def normal(self, shape, axes, scale=None, dtype=None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else (1.0 / jnp.sqrt(fan_in))
+        return jax.random.normal(self._next(), shape, dtype or self.dtype) * s, tuple(axes)
+
+    def zeros(self, shape, axes, dtype=None):
+        return jnp.zeros(shape, dtype or self.dtype), tuple(axes)
+
+    def ones(self, shape, axes, dtype=None):
+        return jnp.ones(shape, dtype or self.dtype), tuple(axes)

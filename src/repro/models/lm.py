@@ -1,0 +1,672 @@
+"""Unified LM assembly for the assigned architecture zoo.
+
+One functional model covers five families, selected by ``cfg.family``:
+
+  dense / moe / vlm    decoder-only transformer (GQA + RoPE; SWA optional;
+                       per-layer MoE for the moe family; the vlm family
+                       prepends projected patch embeddings to the token
+                       sequence — the ViT frontend is a stub per the
+                       assignment, ``input_specs`` supplies patch embeds).
+  ssm_rwkv6            RWKV6 (Finch) blocks — attention-free.
+  hybrid_mamba2        Mamba2 backbone with a *shared* attention+MLP block
+                       applied every ``cfg.attn_every`` layers (zamba2).
+  audio_encdec         whisper-style encoder-decoder; the conv frontend is
+                       a stub (``input_specs`` supplies frame embeddings);
+                       decoder layers carry self- plus cross-attention.
+
+Everything is scan-over-layers (stacked per-layer params, compact HLO,
+remat policy from ``cfg.remat``), logical-axis sharded (dist/sharding.py),
+and has three entry points used by the launchers and the dry-run:
+
+  lm_loss      training forward + chunked cross-entropy (never materializes
+               the full (B,T,V) logits)
+  prefill      prompt ingestion -> (last-token logits, decode cache)
+  decode_step  one token for every sequence in the batch, O(1) state for
+               ssm/hybrid layers, ring buffer for SWA layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.layers import Initializer, layer_norm, rms_norm
+
+__all__ = ["init_lm", "lm_loss", "forward_hidden", "init_decode_cache",
+           "prefill", "decode_step", "input_specs", "param_count",
+           "split_tree"]
+
+
+# --------------------------------------------------------------- param utils
+
+def _is_spec(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "shape")
+            and isinstance(x[1], tuple))
+
+
+def split_tree(tree):
+    """Tree of (array, axes) -> (params tree, axes tree)."""
+    params = jax.tree.map(lambda l: l[0], tree, is_leaf=_is_spec)
+    axes = jax.tree.map(lambda l: l[1], tree, is_leaf=_is_spec)
+    return params, axes
+
+
+def _stack_layers(per_layer: list, axes_one):
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes_one,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+def param_count(params) -> int:
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+# -------------------------------------------------------------------- blocks
+
+def _norm(x, p, name):
+    if name + "_b" in p:
+        return layer_norm(x, p[name], p[name + "_b"])
+    return rms_norm(x, p[name])
+
+
+def _init_norm(ini, cfg, name) -> dict:
+    d = cfg.d_model
+    p = {name: ini.ones((d,), ("norm",))}
+    if cfg.norm == "layer":
+        p[name + "_b"] = ini.zeros((d,), ("norm",))
+    return p
+
+
+def _init_tf_block(key, cfg: ModelConfig, cross: bool = False,
+                   use_moe: bool = False):
+    ini = Initializer(key, dtype=jnp.dtype(cfg.dtype))
+    p = {}
+    p.update(_init_norm(ini, cfg, "ln1"))
+    p["attn"] = T.init_attention(ini, cfg)
+    if cross:
+        p.update(_init_norm(ini, cfg, "lnx"))
+        p["xattn"] = T.init_attention(ini, cfg, cross=True)
+    p.update(_init_norm(ini, cfg, "ln2"))
+    if use_moe:
+        p["moe"] = T.init_moe(ini, cfg)
+    else:
+        p["mlp"] = T.init_mlp(ini, cfg)
+    return split_tree(p)
+
+
+def _tf_block(p, h, cfg: ModelConfig, *, positions=None, cache=None,
+              cache_pos=None, enc=None, causal=True, q_chunk=1024):
+    """One transformer layer. Returns (h, new_cache or None)."""
+    a, c_self = T.attention(p["attn"], _norm(h, p, "ln1"), cfg,
+                            positions=positions,
+                            cache=None if cache is None else cache["self"],
+                            cache_pos=cache_pos, causal=causal,
+                            q_chunk=q_chunk)
+    h = h + a
+    c_cross = None
+    if "xattn" in p:
+        xa, c_cross = T.attention(
+            p["xattn"], _norm(h, p, "lnx"), cfg, kv_src=enc,
+            cache=None if cache is None else cache["cross"],
+            use_rope=False, causal=False, q_chunk=q_chunk)
+        h = h + xa
+    f_in = _norm(h, p, "ln2")
+    f = T.moe(p["moe"], f_in, cfg) if "moe" in p else T.mlp(p["mlp"], f_in, cfg)
+    h = h + f
+    h = constrain(h, "batch", None, None)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"self": c_self}
+        if "xattn" in p:
+            new_cache["cross"] = c_cross
+    return h, new_cache
+
+
+
+
+def _scan(body, init, xs, scope: str):
+    """lax.scan with a named scope (the scope name lands in HLO op metadata,
+    so the dry-run collective parser can multiply per-iteration collectives
+    by the trip count — XLA cost analysis counts while bodies only once)."""
+    with jax.named_scope(scope):
+        return jax.lax.scan(body, init, xs)
+
+
+def _scan_cache(block_fn, h, params_stacked, cache_stack, scope: str,
+                extra_xs=None):
+    """Scan over stacked layer params with an IN-PLACE cache update.
+
+    The cache rides in the scan CARRY (sliced per layer with dynamic_index,
+    written back with dynamic_update_index) instead of as xs->ys streams:
+    while-loop carries alias in XLA, so one decode/prefill step holds ONE
+    cache copy, not two (the xs/ys form double-buffers the multi-GB cache).
+
+    block_fn(h, p_l, cache_l[, extra_l]) -> (h, new_cache_l); extra_xs is an
+    optional read-only stacked tree (e.g. whisper cross K/V at decode).
+    """
+    def slice_l(tree, l):
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, l, 0, keepdims=False),
+            tree)
+
+    def body(carry, p_l):
+        h, cstack, l = carry
+        if extra_xs is not None:
+            p_l, x_l = p_l
+            out = block_fn(h, p_l, slice_l(cstack, l), x_l)
+        else:
+            out = block_fn(h, p_l, slice_l(cstack, l))
+        h, nc = out
+        cstack = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), l, 0),
+            cstack, nc)
+        return (h, cstack, l + 1), None
+
+    xs = params_stacked if extra_xs is None else (params_stacked, extra_xs)
+    (h, cstack, _), _ = _scan(body, (h, cache_stack, jnp.int32(0)), xs, scope)
+    return h, cstack
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------- init
+
+def init_lm(key: jax.Array, cfg: ModelConfig):
+    """Returns (params, axes) trees. Use jax.eval_shape for the dry run."""
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 8)
+    ini = Initializer(keys[0], dtype=dt)
+    d, v = cfg.d_model, cfg.padded_vocab
+    tree: dict[str, Any] = {
+        "embed": ini.normal((v, d), ("vocab", "embed"), scale=0.02),
+    }
+    tree.update(_init_norm(ini, cfg, "ln_f"))
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ini.normal((d, v), ("embed", "vocab"))
+    params, axes = split_tree(tree)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        per, ax1 = [], None
+        for l in range(cfg.n_layers):
+            p_l, ax1 = _init_tf_block(keys[1 + l], cfg, use_moe=(fam == "moe"))
+            per.append(p_l)
+        params["layers"], axes["layers"] = _stack_layers(per, ax1)
+        if fam == "vlm":
+            ini2 = Initializer(keys[-1], dtype=dt)
+            t2 = {"patch_proj": ini2.normal((d, d), ("embed", "embed2"))}
+            p2, a2 = split_tree(t2)
+            params.update(p2), axes.update(a2)
+    elif fam == "ssm_rwkv6":
+        per, ax1 = [], None
+        for l in range(cfg.n_layers):
+            ini_l = Initializer(keys[1 + l], dtype=dt)
+            p_l, ax1 = split_tree(S.init_rwkv6_block(ini_l, cfg))
+            per.append(p_l)
+        params["layers"], axes["layers"] = _stack_layers(per, ax1)
+    elif fam == "hybrid_mamba2":
+        per, ax1 = [], None
+        for l in range(cfg.n_layers):
+            ini_l = Initializer(keys[1 + l], dtype=dt)
+            p_l, ax1 = split_tree(S.init_mamba2_block(ini_l, cfg))
+            per.append(p_l)
+        params["layers"], axes["layers"] = _stack_layers(per, ax1)
+        p_a, ax_a = _init_tf_block(keys[-2], cfg)  # ONE shared attn block
+        params["shared_attn"], axes["shared_attn"] = p_a, ax_a
+    elif fam == "audio_encdec":
+        enc, eax = [], None
+        for l in range(cfg.enc_layers):
+            p_l, eax = _init_tf_block(keys[1 + l], cfg)
+            enc.append(p_l)
+        params["enc_layers"], axes["enc_layers"] = _stack_layers(enc, eax)
+        dec, dax = [], None
+        for l in range(cfg.n_layers):
+            p_l, dax = _init_tf_block(keys[1 + cfg.enc_layers + l], cfg,
+                                      cross=True)
+            dec.append(p_l)
+        params["layers"], axes["layers"] = _stack_layers(dec, dax)
+        ini2 = Initializer(keys[-1], dtype=dt)
+        t2 = {"frame_proj": ini2.normal((d, d), ("embed", "embed2"))}
+        t2.update({k: v for k, v in _init_norm(ini2, cfg, "ln_enc").items()})
+        p2, a2 = split_tree(t2)
+        params.update(p2), axes.update(a2)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params, axes
+
+
+# ------------------------------------------------------------------- forward
+
+def _embed_tokens(params, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(h, "batch", None, None)
+
+
+def _encode_frames(params, frames, cfg):
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    h = frames.astype(jnp.dtype(cfg.dtype)) @ params["frame_proj"].astype(
+        jnp.dtype(cfg.dtype))
+
+    def body(h, p_l):
+        h, _ = _tf_block(p_l, h, cfg, causal=False)
+        return h, None
+
+    h, _ = _scan(_remat(body, cfg), h, params["enc_layers"], "enc_scan")
+    return _norm(h, params, "ln_enc")
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, q_chunk: int = 1024):
+    """Training/scoring forward -> hidden states at *text* positions (B,T,D)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = _embed_tokens(params, tokens, cfg)
+    fam = cfg.family
+    n_prefix = 0
+    positions = None
+
+    if fam == "vlm":
+        patches = batch["patches"].astype(h.dtype) @ params["patch_proj"].astype(h.dtype)
+        h = jnp.concatenate([patches, h], axis=1)
+        n_prefix = patches.shape[1]
+    if fam in ("dense", "moe", "vlm"):
+        tt = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+
+        def body(h, p_l):
+            h, _ = _tf_block(p_l, h, cfg, positions=positions,
+                             q_chunk=q_chunk)
+            return h, None
+
+        h, _ = _scan(_remat(body, cfg), h, params["layers"], "layers_scan")
+    elif fam == "ssm_rwkv6":
+        def body(h, p_l):
+            return S.rwkv6_block(p_l, h, cfg), None
+
+        h, _ = _scan(_remat(body, cfg), h, params["layers"], "layers_scan")
+    elif fam == "hybrid_mamba2":
+        g, a = _hybrid_groups(cfg)
+        grouped = jax.tree.map(
+            lambda x: x.reshape(g, a, *x.shape[1:]), params["layers"])
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        shared = params["shared_attn"]
+
+        def inner(h, p_l):
+            return _remat(lambda hh, pp: S.mamba2_block(pp, hh, cfg), cfg)(
+                h, p_l), None
+
+        def outer(h, p_g):
+            h, _ = _scan(inner, h, p_g, "mamba_scan")
+            h, _ = _tf_block(shared, h, cfg, positions=positions,
+                             q_chunk=q_chunk)
+            return h, None
+
+        h, _ = _scan(outer, h, grouped, "group_scan")
+    elif fam == "audio_encdec":
+        enc = _encode_frames(params, batch["frames"], cfg)
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+        def body(h, p_l):
+            h, _ = _tf_block(p_l, h, cfg, positions=positions, enc=enc,
+                             q_chunk=q_chunk)
+            return h, None
+
+        h, _ = _scan(_remat(body, cfg), h, params["layers"], "layers_scan")
+    else:
+        raise ValueError(fam)
+
+    h = _norm(h, params, "ln_f")
+    if n_prefix:
+        h = h[:, n_prefix:]
+    return h
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    a = cfg.attn_every or cfg.n_layers
+    assert cfg.n_layers % a == 0, (cfg.n_layers, a)
+    return cfg.n_layers // a, a
+
+
+def _head_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_cross_entropy(h, head, labels, t_chunk: int = 512,
+                          z_loss: float = 1e-4):
+    """CE over (B,T,D) hidden x (D,V) head without materializing (B,T,V)."""
+    b, t, d = h.shape
+    pad = (-t) % t_chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = h.shape[1] // t_chunk
+    hc = h.reshape(b, nc, t_chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, t_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute the (chunk, V) logits in backward: the
+    def body(carry, inp):  # saved per-chunk logits otherwise dominate HBM
+        h_i, y_i = inp
+        logits = (h_i @ head.astype(h_i.dtype)).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab_act")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(y_i, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        valid = y_i >= 0
+        return (carry[0] + jnp.sum(jnp.where(valid, nll, 0.0)),
+                carry[1] + jnp.sum(valid)), None
+
+    (loss_sum, n), _ = _scan(body, (0.0, 0), (hc, lc), "ce_scan")
+    n = jnp.maximum(n, 1)
+    return loss_sum / n, n
+
+
+def lm_loss(params, batch, cfg: ModelConfig, q_chunk: int = 1024,
+            t_chunk: int = 512):
+    h = forward_hidden(params, batch, cfg, q_chunk=q_chunk)
+    loss, n = chunked_cross_entropy(h, _head_matrix(params, cfg),
+                                    batch["labels"], t_chunk=t_chunk)
+    return loss, {"tokens": n}
+
+
+# -------------------------------------------------------------------- decode
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Returns (cache, axes). Cache covers `max_seq` total positions."""
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    kv_axes = ("cache_batch", "cache_seq", "kv_heads", None)
+    ring_axes = ("cache_seq",)
+
+    def attn_cache(n_stack, seq, ring=None):
+        one = T.init_attn_cache(cfg, batch, seq, dtype=dt, ring=ring)
+        c = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_stack,) + x.shape)
+                         if n_stack else x, one)
+        ax = {"k": kv_axes, "v": kv_axes}
+        if "k_s" in one:
+            ax["k_s"] = kv_axes[:one["k_s"].ndim]
+            ax["v_s"] = kv_axes[:one["v_s"].ndim]
+        if "kv_pos" in one:
+            ax["kv_pos"] = ring_axes
+        if n_stack:
+            ax = jax.tree.map(lambda a: ("layers",) + a, ax,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return c, ax
+
+    pos = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "moe", "vlm"):
+        seq = max_seq + (cfg.n_patches if fam == "vlm" else 0)
+        c, ax = attn_cache(cfg.n_layers, seq)
+        return ({"layers": {"self": c}, "pos": pos},
+                {"layers": {"self": ax}, "pos": ()})
+    if fam == "ssm_rwkv6":
+        one = S.rwkv6_state(cfg, batch)
+        c = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+        ax = {"s": ("layers", "cache_batch", "heads", None, None),
+              "x_t": ("layers", "cache_batch", None),
+              "x_c": ("layers", "cache_batch", None)}
+        return ({"layers": c, "pos": pos}, {"layers": ax, "pos": ()})
+    if fam == "hybrid_mamba2":
+        g, a = _hybrid_groups(cfg)
+        one = S.mamba2_state(cfg, batch)
+        c = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+        m_ax = {"s": ("layers", "cache_batch", "heads", None, None),
+                "conv": ("layers", "cache_batch", None, "mlp")}
+        ac, aax = attn_cache(g, max_seq)
+        return ({"mamba": c, "attn": {"self": ac}, "pos": pos},
+                {"mamba": m_ax, "attn": {"self": aax}, "pos": ()})
+    if fam == "audio_encdec":
+        sc, sax = attn_cache(cfg.n_layers, max_seq)
+        xc, xax = attn_cache(cfg.n_layers, cfg.n_frames)
+        return ({"layers": {"self": sc, "cross": xc}, "pos": pos},
+                {"layers": {"self": sax, "cross": xax}, "pos": ()})
+    raise ValueError(fam)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int,
+            q_chunk: int = 1024):
+    """Prompt ingestion. Returns (last-token logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    cache, _ = init_decode_cache(cfg, b, max_seq)
+    h = _embed_tokens(params, tokens, cfg)
+    fam = cfg.family
+    n_prefix = 0
+    if fam == "vlm":
+        patches = batch["patches"].astype(h.dtype) @ params["patch_proj"].astype(h.dtype)
+        h = jnp.concatenate([patches, h], axis=1)
+        n_prefix = patches.shape[1]
+    tt = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+
+    if fam in ("dense", "moe", "vlm"):
+        h, new_c = _scan_cache(
+            lambda hh, p_l, c_l: _tf_block(
+                p_l, hh, cfg, positions=positions, cache=c_l, cache_pos=0,
+                q_chunk=q_chunk),
+            h, params["layers"], cache["layers"], "layers_scan")
+        cache = {"layers": new_c, "pos": jnp.asarray(tt, jnp.int32)}
+    elif fam == "ssm_rwkv6":
+        def body(carry, xs):
+            h = carry
+            p_l = xs
+            # run the chunked form, then recover the final state by replay
+            # of the block with state capture
+            h2, st = _rwkv_block_with_state(p_l, h, cfg)
+            return h2, st
+
+        h, states = _scan(body, h, params["layers"], "layers_scan")
+        cache = {"layers": states, "pos": jnp.asarray(tt, jnp.int32)}
+    elif fam == "hybrid_mamba2":
+        g, a = _hybrid_groups(cfg)
+        grouped = jax.tree.map(lambda x: x.reshape(g, a, *x.shape[1:]),
+                               params["layers"])
+        shared = params["shared_attn"]
+
+        def inner(h, p_l):
+            h2, st = _mamba_block_with_state(p_l, h, cfg)
+            return h2, st
+
+        def group_block(hh, p_g, c_l):
+            hh, sts = _scan(inner, hh, p_g, "mamba_scan")
+            hh, nc = _tf_block(shared, hh, cfg, positions=positions,
+                               cache=c_l, cache_pos=0, q_chunk=q_chunk)
+            return hh, dict(nc, mamba=sts)
+
+        m_one = jax.eval_shape(lambda: S.mamba2_state(cfg, b))
+        m_init = jax.tree.map(
+            lambda sd: jnp.zeros((g, a) + sd.shape, sd.dtype), m_one)
+        h, new_c = _scan_cache(
+            group_block, h, grouped,
+            {"self": cache["attn"]["self"], "mamba": m_init}, "group_scan")
+        m_states = jax.tree.map(
+            lambda x: x.reshape(cfg.n_layers, *x.shape[2:]), new_c["mamba"])
+        cache = {"mamba": m_states, "attn": {"self": new_c["self"]},
+                 "pos": jnp.asarray(tt, jnp.int32)}
+    elif fam == "audio_encdec":
+        enc = _encode_frames(params, batch["frames"], cfg)
+
+        def block(hh, p_l, c_l):
+            # write cross K/V once from encoder output
+            xk = T.cross_kv(p_l["xattn"], enc, cfg)
+            c_l = dict(c_l, cross=jax.tree.map(
+                lambda dst, src: src.astype(dst.dtype), c_l["cross"], xk))
+            return _tf_block(p_l, hh, cfg, positions=positions, cache=c_l,
+                             cache_pos=0, q_chunk=q_chunk)
+
+        h, new_c = _scan_cache(block, h, params["layers"], cache["layers"],
+                               "layers_scan")
+        cache = {"layers": new_c, "pos": jnp.asarray(tt, jnp.int32)}
+    else:
+        raise ValueError(fam)
+
+    h = _norm(h, params, "ln_f")
+    logits = (h[:, -1] @ _head_matrix(params, cfg).astype(h.dtype)
+              ).astype(jnp.float32)
+    return logits, cache
+
+
+def _rwkv_block_with_state(p, x, cfg):
+    """rwkv6 chunked block that also returns the decode state."""
+    b, t, d = x.shape
+    h = d // S.RWKV_HEAD
+    dtype = x.dtype
+    xn = layer_norm(x, p["ln1_w"], p["ln1_b"]).astype(jnp.float32)
+    xs = S._shift(xn, jnp.zeros((b, d), jnp.float32))
+    r, k, v, g, lw = S._rwkv_time_mix(p, xn, xs, cfg, dtype)
+    s0 = jnp.zeros((b, h, S.RWKV_HEAD, S.RWKV_HEAD), jnp.float32)
+    wkv, s_fin = S.gla_chunked(r, k, v, lw, p["u"].astype(jnp.float32), s0,
+                               min(32, t))
+    x = x + S._rwkv_out(p, wkv, g, cfg, dtype)
+    xn2 = layer_norm(x, p["ln2_w"], p["ln2_b"]).astype(jnp.float32)
+    xs2 = S._shift(xn2, jnp.zeros((b, d), jnp.float32))
+    x = x + S._rwkv_channel_mix(p, xn2, xs2).astype(dtype)
+    return x, {"s": s_fin, "x_t": xn[:, -1], "x_c": xn2[:, -1]}
+
+
+def _mamba_block_with_state(p, x, cfg):
+    """mamba2 chunked block that also returns the decode state."""
+    from repro.models.layers import rms_norm as _rms
+
+    b, t, d0 = x.shape
+    d, d_in, nh, n, conv_w = S._mamba_dims(cfg)
+    dtype = x.dtype
+    xn = _rms(x, p["ln_w"]).astype(jnp.float32)
+    zxbcdt = xn @ p["in_proj"].astype(jnp.float32)
+    z, xbc_pre, dt = S._mamba_split(zxbcdt, cfg)
+    pad = jnp.zeros((b, S.CONV_K - 1, conv_w), jnp.float32)
+    xpad = jnp.concatenate([pad, xbc_pre], axis=1)
+    wconv = p["conv_w"].astype(jnp.float32)
+    xbc = sum(xpad[:, i:i + t] * wconv[i] for i in range(S.CONV_K)) \
+        + p["conv_b"].astype(jnp.float32)
+    xh, a_log_t, Bh, Ch, _ = S._mamba_ssm(p, xbc, dt, cfg)
+    s0 = jnp.zeros((b, nh, n, S.MAMBA_HEAD), jnp.float32)
+    y, s_fin = S.ssd_chunked(xh, a_log_t, Bh, Ch, s0, chunk=min(128, t))
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = S._gated_rmsnorm(y.reshape(b, t, d_in), z, p["norm_w"])
+    x = x + (y @ p["out_proj"].astype(jnp.float32)).astype(dtype)
+    return x, {"s": s_fin, "conv": xpad[:, t:t + S.CONV_K - 1]
+               if t >= S.CONV_K - 1 else xpad[:, -S.CONV_K + 1:]}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One token for each sequence. tokens (B, 1) -> (logits (B,V), cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]  # absolute position in the (prefix + text) sequence
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    h = _embed_tokens(params, tokens, cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        h, new_c = _scan_cache(
+            lambda hh, p_l, c_l: _tf_block(
+                p_l, hh, cfg, positions=positions, cache=c_l, cache_pos=pos),
+            h, params["layers"], cache["layers"], "layers_scan")
+        new_cache = {"layers": new_c, "pos": pos + 1}
+    elif fam == "ssm_rwkv6":
+        h1, states = _scan_cache(
+            lambda hh, p_l, st: S.rwkv6_block_step(p_l, hh, st, cfg),
+            h[:, 0], params["layers"], cache["layers"], "layers_scan")
+        h = h1[:, None]
+        new_cache = {"layers": states, "pos": pos + 1}
+    elif fam == "hybrid_mamba2":
+        g, a = _hybrid_groups(cfg)
+        grouped = jax.tree.map(lambda x: x.reshape(g, a, *x.shape[1:]),
+                               params["layers"])
+        m_states = jax.tree.map(lambda x: x.reshape(g, a, *x.shape[1:]),
+                                cache["mamba"])
+        shared = params["shared_attn"]
+        h1 = h[:, 0]
+
+        def inner(hh, xs):
+            p_l, st = xs
+            hh, st2 = S.mamba2_block_step(p_l, hh, st, cfg)
+            return hh, st2
+
+        def group_block(hh, p_g, c_l):
+            hh, st2 = _scan(inner, hh, (p_g, c_l["mamba"]), "mamba_scan")
+            hh2, nc = _tf_block(shared, hh[:, None], cfg,
+                                positions=positions, cache=c_l,
+                                cache_pos=pos)
+            return hh2[:, 0], dict(nc, mamba=st2)
+
+        h1, new_c = _scan_cache(
+            group_block, h1, grouped,
+            {"self": cache["attn"]["self"], "mamba": m_states}, "group_scan")
+        h = h1[:, None]
+        m_new = jax.tree.map(lambda x: x.reshape(cfg.n_layers, *x.shape[2:]),
+                             new_c["mamba"])
+        new_cache = {"mamba": m_new, "attn": {"self": new_c["self"]},
+                     "pos": pos + 1}
+    elif fam == "audio_encdec":
+        # cross K/V is read-only at decode: keep it OUT of the carried
+        # cache (no copy), pass as read-only xs
+        self_stack = {"self": cache["layers"]["self"]}
+        cross_stack = cache["layers"]["cross"]
+
+        def block(hh, p_l, c_l, x_l):
+            hh, nc = _tf_block(p_l, hh, cfg, positions=positions,
+                               cache=dict(c_l, cross=x_l), cache_pos=pos)
+            return hh, {"self": nc["self"]}
+
+        h, new_c = _scan_cache(block, h, params["layers"], self_stack,
+                               "layers_scan", extra_xs=cross_stack)
+        new_cache = {"layers": {"self": new_c["self"], "cross": cross_stack},
+                     "pos": pos + 1}
+    else:
+        raise ValueError(fam)
+
+    h = _norm(h, params, "ln_f")
+    logits = (h[:, -1] @ _head_matrix(params, cfg).astype(h.dtype)
+              ).astype(jnp.float32)
+    logits = constrain(logits, "batch", "vocab_act")
+    return logits, new_cache
+
+
+# --------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape, max_seq: int | None = None):
+    """ShapeDtypeStructs for every model input of (cfg, shape).
+
+    train  -> {"tokens","labels"[,"patches"/"frames"]}
+    prefill-> {"tokens"[,"patches"/"frames"]}
+    decode -> ({"tokens"}, cache_specs)   (cache covers shape.seq)
+    """
+    b, t = shape.batch, shape.seq
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    def extras(batch):
+        e = {}
+        if cfg.family == "vlm":
+            e["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), dt)
+        if cfg.family == "audio_encdec":
+            e["frames"] = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model), dt)
+        return e
+
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, t), i32),
+                "labels": jax.ShapeDtypeStruct((b, t), i32), **extras(b)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, t), i32), **extras(b)}
+    # decode: one new token against a cache covering t positions
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, b, t)[0])
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}, cache

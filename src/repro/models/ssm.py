@@ -1,0 +1,433 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are implemented in two equivalent forms sharing one parameter pytree:
+
+  chunked  — training/prefill: the sequence is cut into fixed chunks; the
+             intra-chunk part is a masked matmul with *log-domain pairwise
+             decay* (every exp() argument is <= 0, so the chunked form is
+             overflow-safe for arbitrarily strong data-dependent decay —
+             no clamping needed, unlike the factored exp(a_t)*exp(-a_s)
+             trick), and the inter-chunk part is a scanned state recurrence.
+             This is the TPU-native adaptation: chunk matmuls land on the
+             MXU; the scan carries an O(d*state) tensor.
+  step     — decode: O(1) per-token recurrent update.
+
+Sequential oracles (``gla_sequential``/``ssd_sequential``) are kept here for
+the property tests: chunked == sequential to fp32 tolerance for any decay.
+
+RWKV6 semantics (exclusive + bonus):   o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+                                       S_t = diag(w_t) S_{t-1} + k_t v_t^T
+Mamba2/SSD semantics (inclusive):      S_t = a_t S_{t-1} + B_t (dt_t x_t)^T
+                                       y_t = C_t . S_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Initializer, layer_norm
+
+__all__ = [
+    "gla_chunked", "gla_sequential", "gla_step",
+    "ssd_chunked", "ssd_sequential", "ssd_step",
+    "init_rwkv6_block", "rwkv6_block", "rwkv6_block_step", "rwkv6_state",
+    "init_mamba2_block", "mamba2_block", "mamba2_block_step", "mamba2_state",
+]
+
+
+# =====================================================================
+# GLA-style chunked linear attention with per-channel decay (RWKV6 core)
+# =====================================================================
+
+def gla_chunked(r, k, v, lw, u, s0, chunk: int = 32):
+    """Per-channel-decay linear attention, chunked parallel form.
+
+    r, k, v, lw: (B, T, H, K) fp32; lw = log decay, <= 0. u: (H, K) bonus.
+    s0: (B, H, K, V) initial state. T % chunk == 0.
+    Returns (out (B, T, H, V), s_final).
+    """
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    t0 = t
+    pad = (-t) % chunk
+    if pad:
+        # neutral padding: k=0 (no state contribution), lw=0 (no decay)
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = map(zeros, (r, k, v, lw))
+        t = t + pad
+    nc = t // chunk
+
+    def to_chunks(x):
+        # (B, T, H, X) -> (NC, B, H, L, X)
+        return x.reshape(b, nc, chunk, h, -1).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower: s < t
+
+    def body(s, inp):
+        r_c, k_c, v_c, lw_c = inp           # (B, H, L, K/V)
+        a = jnp.cumsum(lw_c, axis=2)        # inclusive cumsum, <= 0, decreasing
+        a_prev = a - lw_c                   # exclusive cumsum (a_{t-1})
+        # inter-chunk: o_t += (r_t * exp(a_{t-1})) @ S0        [exp arg <= 0]
+        o_inter = jnp.einsum("bhlk,bhkv->bhlv", r_c * jnp.exp(a_prev), s)
+        # intra-chunk: score[t,s] = sum_k r_t k_s exp(a_{t-1,k} - a_{s,k}), s<t
+        # pairwise log-domain: argument <= 0 on the mask, never overflows.
+        # double-where: masked entries have d > 0 (exp -> inf) whose cotangent
+        # would be inf*0 = nan — zero d BEFORE exp so grads stay finite.
+        tmask = tri[None, None, :, :, None]
+        d = a_prev[:, :, :, None, :] - a[:, :, None, :, :]   # (B,H,L,L,K)
+        p = jnp.where(tmask, jnp.exp(jnp.where(tmask, d, 0.0)), 0.0)
+        p = p * k_c[:, :, None, :, :]
+        scores = jnp.einsum("bhlk,bhlmk->bhlm", r_c, p)
+        bonus = jnp.sum(r_c * u[None, :, None, :] * k_c, axis=-1)  # diag term
+        o = o_inter + scores @ v_c + bonus[..., None] * v_c
+        # state to chunk end: S_L = exp(a_L) . S0 + sum_s exp(a_L - a_s) k_s v_s^T
+        rest = jnp.exp(a[:, :, -1:, :] - a)                  # (B,H,L,K) <= 1
+        s_new = s * jnp.exp(a[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhlk,bhlv->bhkv", k_c * rest, v_c)
+        return s_new, o
+
+    with jax.named_scope("gla_scan"):
+        s_fin, outs = jax.lax.scan(body, s0, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, vv)
+    return out[:, :t0], s_fin
+
+
+def gla_sequential(r, k, v, lw, u, s0):
+    """Token-by-token oracle for gla_chunked (tests only)."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B, H, K/V)
+        o, s = gla_step(r_t, k_t, v_t, lw_t, u, s)
+        return s, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, lw))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), s_fin
+
+
+def gla_step(r_t, k_t, v_t, lw_t, u, s):
+    """One decode step. r_t..lw_t: (B, H, K); s: (B, H, K, V)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r_t, s) + jnp.einsum(
+        "bhk,bhkv->bhv", r_t * u[None], kv)
+    s = jnp.exp(lw_t)[..., None] * s + kv
+    return o, s
+
+
+# =====================================================================
+# SSD: chunked scan with per-head scalar decay (Mamba2 core)
+# =====================================================================
+
+def ssd_chunked(x, a_log, B, C, s0, chunk: int = 128):
+    """Mamba2 SSD, chunked parallel form.
+
+    x: (B, T, H, P) pre-scaled by dt; a_log: (B, T, H) log decay <= 0;
+    B, C: (B, T, H, N) (groups already broadcast to heads);
+    s0: (B, H, N, P). Returns (y (B,T,H,P), s_final). Inclusive semantics.
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    t0 = t
+    pad = (-t) % chunk
+    if pad:
+        # neutral padding: B=0 (no state contribution), a_log=0 (no decay)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    Bc = B.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+    Cc = C.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+    ac = a_log.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)  # (NC,B,H,L)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))             # s <= t
+
+    def body(s, inp):
+        x_c, b_c, c_c, a_c = inp
+        ca = jnp.cumsum(a_c, axis=2)                 # (B,H,L) inclusive
+        # inter: y_t += exp(ca_t) * C_t @ S0
+        y_inter = jnp.einsum("bhln,bhnp->bhlp", c_c, s) * jnp.exp(ca)[..., None]
+        # intra: score[t,s] = exp(ca_t - ca_s) * (C_t . B_s), s <= t
+        # (double-where as in gla_chunked: keep masked-entry grads finite)
+        tmask = tri[None, None]
+        d = ca[:, :, :, None] - ca[:, :, None, :]    # <= 0 on the mask
+        w = jnp.where(tmask, jnp.exp(jnp.where(tmask, d, 0.0)), 0.0)
+        scores = jnp.einsum("bhln,bhmn->bhlm", c_c, b_c) * w
+        y = y_inter + scores @ x_c
+        rest = jnp.exp(ca[:, :, -1:] - ca)           # (B,H,L) <= 1
+        s_new = s * jnp.exp(ca[:, :, -1])[..., None, None] + jnp.einsum(
+            "bhln,bhlp->bhnp", b_c * rest[..., None], x_c)
+        return s_new, y
+
+    with jax.named_scope("ssd_scan"):
+        s_fin, ys = jax.lax.scan(body, s0, (xc, Bc, Cc, ac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, p)
+    return y[:, :t0], s_fin
+
+
+def ssd_sequential(x, a_log, B, C, s0):
+    def step(s, inp):
+        x_t, b_t, c_t, a_t = inp
+        y, s = ssd_step(x_t, a_t, b_t, c_t, s)
+        return s, y
+
+    xs = (x.transpose(1, 0, 2, 3), B.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2, 3), a_log.transpose(1, 0, 2))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def ssd_step(x_t, a_t, b_t, c_t, s):
+    """x_t (B,H,P); a_t (B,H); b_t,c_t (B,H,N); s (B,H,N,P)."""
+    s = jnp.exp(a_t)[..., None, None] * s + b_t[..., :, None] * x_t[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", c_t, s)
+    return y, s
+
+
+# =====================================================================
+# RWKV6 block (Finch): data-dependent decay time-mix + relu^2 channel-mix
+# =====================================================================
+
+RWKV_HEAD = 64
+_DECAY_LORA = 64
+
+
+def init_rwkv6_block(ini: Initializer, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h = d // RWKV_HEAD
+    return {
+        "ln1_w": ini.ones((d,), ("norm",)), "ln1_b": ini.zeros((d,), ("norm",)),
+        "ln2_w": ini.ones((d,), ("norm",)), "ln2_b": ini.zeros((d,), ("norm",)),
+        # token-shift lerp weights for r, k, v, w, g
+        "mu": ini.zeros((5, d), (None, "embed")),
+        # data-dependent decay (the Finch signature): lw = -exp(w0 + tanh(xw A) B)
+        "w0": ini.normal((d,), ("embed",), scale=0.5),
+        "wa": ini.normal((d, _DECAY_LORA), ("embed", None)),
+        "wb": ini.normal((_DECAY_LORA, d), (None, "embed"), scale=0.01),
+        "u": ini.normal((h, RWKV_HEAD), ("heads", None), scale=0.5),
+        "wr": ini.normal((d, d), ("embed", "qkv")),
+        "wk": ini.normal((d, d), ("embed", "qkv")),
+        "wv": ini.normal((d, d), ("embed", "qkv")),
+        "wg": ini.normal((d, d), ("embed", "qkv")),
+        "wo": ini.normal((d, d), ("qkv", "embed")),
+        "gn_w": ini.ones((d,), ("norm",)), "gn_b": ini.zeros((d,), ("norm",)),
+        # channel mix (relu^2, hidden = d_ff)
+        "mu_c": ini.zeros((2, d), (None, "embed")),
+        "ck": ini.normal((d, f), ("embed", "mlp")),
+        "cv": ini.normal((f, d), ("mlp", "embed")),
+        "cr": ini.normal((d, d), ("embed", "embed2")),
+    }
+
+
+def rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = d // RWKV_HEAD
+    return {
+        "s": jnp.zeros((batch, h, RWKV_HEAD, RWKV_HEAD), dtype),
+        "x_t": jnp.zeros((batch, d), dtype),   # last input of time-mix
+        "x_c": jnp.zeros((batch, d), dtype),   # last input of channel-mix
+    }
+
+
+def _shift(x, x_last):
+    """Token shift: (B,T,D), (B,D) -> previous-token tensor (B,T,D)."""
+    return jnp.concatenate([x_last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix(p, xn, xs, cfg, dtype):
+    d = cfg.d_model
+    h = d // RWKV_HEAD
+    mu = p["mu"].astype(jnp.float32)
+    mix = lambda i: xn + mu[i] * (xs - xn)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    wr = constrain(p["wr"], None, "qkv_compute")
+    wk = constrain(p["wk"], None, "qkv_compute")
+    wv = constrain(p["wv"], None, "qkv_compute")
+    wg = constrain(p["wg"], None, "qkv_compute")
+    r = (xr @ wr.astype(jnp.float32)).reshape(*xn.shape[:-1], h, RWKV_HEAD)
+    k = (xk @ wk.astype(jnp.float32)).reshape(*xn.shape[:-1], h, RWKV_HEAD)
+    v = (xv @ wv.astype(jnp.float32)).reshape(*xn.shape[:-1], h, RWKV_HEAD)
+    g = xg @ wg.astype(jnp.float32)
+    lw = -jnp.exp(p["w0"].astype(jnp.float32)
+                  + jnp.tanh(xw @ p["wa"].astype(jnp.float32))
+                  @ p["wb"].astype(jnp.float32))
+    lw = lw.reshape(*xn.shape[:-1], h, RWKV_HEAD)
+    return r, k, v, g, lw
+
+
+def _rwkv_out(p, wkv, g, cfg, dtype):
+    """Per-head groupnorm -> silu(g) gate -> output proj."""
+    b_shape = wkv.shape[:-2]
+    d = cfg.d_model
+    mu = jnp.mean(wkv, axis=-1, keepdims=True)
+    var = jnp.var(wkv, axis=-1, keepdims=True)
+    o = ((wkv - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(*b_shape, d)
+    o = o * p["gn_w"].astype(jnp.float32) + p["gn_b"].astype(jnp.float32)
+    o = o * jax.nn.silu(g)
+    wo = constrain(p["wo"], "qkv_compute", None)
+    return (o @ wo.astype(jnp.float32)).astype(dtype)
+
+
+def _rwkv_channel_mix(p, xn, xs):
+    mu = p["mu_c"].astype(jnp.float32)
+    xk = xn + mu[0] * (xs - xn)
+    xr = xn + mu[1] * (xs - xn)
+    ck = constrain(p["ck"], None, "mlp_compute")
+    cv = constrain(p["cv"], "mlp_compute", None)
+    cr = constrain(p["cr"], None, "embed2_compute")
+    kk = jnp.square(jax.nn.relu(xk @ ck.astype(jnp.float32)))
+    kk = constrain(kk, "batch", None, "mlp_act") if kk.ndim == 3 else kk
+    return jax.nn.sigmoid(xr @ cr.astype(jnp.float32)) * (
+        kk @ cv.astype(jnp.float32))
+
+
+def rwkv6_block(p, x, cfg: ModelConfig, chunk: int = 32):
+    """Training/prefill form. x: (B, T, D). Returns x'."""
+    b, t, d = x.shape
+    h = d // RWKV_HEAD
+    dtype = x.dtype
+    xn = layer_norm(x, p["ln1_w"], p["ln1_b"]).astype(jnp.float32)
+    xs = _shift(xn, jnp.zeros((b, d), jnp.float32))
+    r, k, v, g, lw = _rwkv_time_mix(p, xn, xs, cfg, dtype)
+    s0 = jnp.zeros((b, h, RWKV_HEAD, RWKV_HEAD), jnp.float32)
+    wkv, _ = gla_chunked(r, k, v, lw, p["u"].astype(jnp.float32), s0,
+                         min(chunk, t))
+    x = x + _rwkv_out(p, wkv, g, cfg, dtype)
+    xn = layer_norm(x, p["ln2_w"], p["ln2_b"]).astype(jnp.float32)
+    xs = _shift(xn, jnp.zeros((b, d), jnp.float32))
+    x = x + _rwkv_channel_mix(p, xn, xs).astype(dtype)
+    return x
+
+
+def rwkv6_block_step(p, x, state, cfg: ModelConfig):
+    """Decode step. x: (B, D). state: rwkv6_state. Returns (x', state')."""
+    b, d = x.shape
+    dtype = x.dtype
+    xn = layer_norm(x[:, None], p["ln1_w"], p["ln1_b"])[:, 0].astype(jnp.float32)
+    r, k, v, g, lw = _rwkv_time_mix(p, xn, state["x_t"], cfg, dtype)
+    wkv, s = gla_step(r, k, v, lw, p["u"].astype(jnp.float32), state["s"])
+    x = x + _rwkv_out(p, wkv, g, cfg, dtype)
+    xn2 = layer_norm(x[:, None], p["ln2_w"], p["ln2_b"])[:, 0].astype(jnp.float32)
+    x = x + _rwkv_channel_mix(p, xn2, state["x_c"]).astype(dtype)
+    return x, {"s": s, "x_t": xn, "x_c": xn2}
+
+
+# =====================================================================
+# Mamba2 block (zamba2 backbone)
+# =====================================================================
+
+MAMBA_HEAD = 64  # P (head dim)
+CONV_K = 4
+
+
+def _mamba_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = 2 * d
+    nh = d_in // MAMBA_HEAD
+    n = cfg.ssm_state
+    conv_w = d_in + 2 * n  # conv over (x, B, C), single group
+    return d, d_in, nh, n, conv_w
+
+
+def init_mamba2_block(ini: Initializer, cfg: ModelConfig) -> dict:
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    return {
+        "ln_w": ini.ones((d,), ("norm",)),
+        "in_proj": ini.normal((d, 2 * d_in + 2 * n + nh), ("embed", "mlp")),
+        "conv_w": ini.normal((CONV_K, conv_w), (None, "mlp"), scale=0.5),
+        "conv_b": ini.zeros((conv_w,), ("mlp",)),
+        "a_log": ini.normal((nh,), ("heads",), scale=0.1),  # A = -exp(a_log)
+        "d_skip": ini.ones((nh,), ("heads",)),
+        "dt_bias": ini.zeros((nh,), ("heads",)),
+        "norm_w": ini.ones((d_in,), ("norm",)),
+        "out_proj": ini.normal((d_in, d), ("mlp", "embed")),
+    }
+
+
+def mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, nh, n, MAMBA_HEAD), dtype),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_w), dtype),
+    }
+
+
+def _mamba_split(zxbcdt, cfg):
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_w]
+    dt = zxbcdt[..., d_in + conv_w:]
+    return z, xbc, dt
+
+
+def _mamba_ssm(p, xbc, dt, cfg):
+    """Post-conv split + SSD inputs. xbc: (..., conv_w) fp32."""
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in]
+    B = xbc[..., d_in:d_in + n]
+    C = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))  # (..., nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_log_t = dt * a                                            # log decay <= 0
+    shp = x.shape[:-1]
+    xh = x.reshape(*shp, nh, MAMBA_HEAD) * dt[..., None]        # dt-scaled input
+    Bh = jnp.broadcast_to(B[..., None, :], (*shp, nh, n))
+    Ch = jnp.broadcast_to(C[..., None, :], (*shp, nh, n))
+    return xh, a_log_t, Bh, Ch, x
+
+
+def _gated_rmsnorm(y, z, w):
+    y = y * jax.nn.silu(z)
+    return y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6) \
+        * w.astype(jnp.float32)
+
+
+def mamba2_block(p, x, cfg: ModelConfig, chunk: int = 128):
+    """Training/prefill form. x: (B, T, D)."""
+    from repro.models.layers import rms_norm
+
+    b, t, d0 = x.shape
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    dtype = x.dtype
+    xn = rms_norm(x, p["ln_w"]).astype(jnp.float32)
+    zxbcdt = xn @ constrain(p["in_proj"], None, "mlp_compute").astype(jnp.float32)
+    z, xbc, dt = _mamba_split(zxbcdt, cfg)
+    # causal depthwise conv, kernel CONV_K
+    pad = jnp.zeros((b, CONV_K - 1, conv_w), jnp.float32)
+    xpad = jnp.concatenate([pad, xbc], axis=1)
+    wconv = p["conv_w"].astype(jnp.float32)
+    xbc = sum(xpad[:, i:i + t] * wconv[i] for i in range(CONV_K)) \
+        + p["conv_b"].astype(jnp.float32)
+    xh, a_log_t, Bh, Ch, x_raw = _mamba_ssm(p, xbc, dt, cfg)
+    s0 = jnp.zeros((b, nh, n, MAMBA_HEAD), jnp.float32)
+    y, _ = ssd_chunked(xh, a_log_t, Bh, Ch, s0, chunk=min(chunk, t))
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = _gated_rmsnorm(y.reshape(b, t, d_in), z, p["norm_w"])
+    wo = constrain(p["out_proj"], "mlp_compute", None)
+    return x + (y @ wo.astype(jnp.float32)).astype(dtype)
+
+
+def mamba2_block_step(p, x, state, cfg: ModelConfig):
+    """Decode step. x: (B, D). Returns (x', state')."""
+    from repro.models.layers import rms_norm
+
+    b, d0 = x.shape
+    d, d_in, nh, n, conv_w = _mamba_dims(cfg)
+    dtype = x.dtype
+    xn = rms_norm(x[:, None], p["ln_w"])[:, 0].astype(jnp.float32)
+    zxbcdt = xn @ p["in_proj"].astype(jnp.float32)
+    z, xbc, dt = _mamba_split(zxbcdt, cfg)
+    window = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,K,W)
+    wconv = p["conv_w"].astype(jnp.float32)
+    xbc = jnp.einsum("bkw,kw->bw", window, wconv) + p["conv_b"].astype(jnp.float32)
+    xh, a_log_t, Bh, Ch, _ = _mamba_ssm(p, xbc, dt, cfg)
+    y, s = ssd_step(xh, a_log_t, Bh, Ch, state["s"])
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = _gated_rmsnorm(y.reshape(b, d_in), z, p["norm_w"])
+    x = x + (y @ p["out_proj"].astype(jnp.float32)).astype(dtype)
+    return x, {"s": s, "conv": window[:, 1:]}

@@ -1,0 +1,569 @@
+"""Attention / FFN / MoE blocks for the LM zoo.
+
+Attention: GQA + RoPE; full-causal, sliding-window (SWA), or cross
+(whisper decoder); query-chunked streaming softmax for long sequences
+(memory O(q_chunk * S) instead of O(T * S)); KV-cache decode with either a
+full cache or an O(window) ring buffer for SWA.
+
+MoE: token-choice top-k with capacity via sort-based gather/scatter
+dispatch; experts shard over 'model' (EP) so the dispatch gather/scatter
+lowers to all-to-all style collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import Initializer, apply_rope, dense, rope
+
+__all__ = ["init_attention", "attention", "init_mlp", "mlp", "init_moe", "moe",
+           "init_attn_cache", "prefill_attn_cache"]
+
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------- attention
+
+def init_attention(ini: Initializer, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ini.normal((d, h * dh), ("embed", "qkv")),
+        "wk": ini.normal((d, hk * dh), ("embed", "qkv")),
+        "wv": ini.normal((d, hk * dh), ("embed", "qkv")),
+        "wo": ini.normal((h * dh, d), ("qkv", "embed")),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16, ring: bool | None = None) -> dict:
+    """Empty decode cache. ring=True -> O(window) SWA ring buffer.
+
+    cfg.kv_bits == 8: the paper's bit compression applied to the decode
+    bottleneck — K/V stored int8 with per-(token, head) max-abs scales,
+    halving the dominant HBM stream of memory-bound decode.
+    """
+    if ring is None:
+        ring = cfg.swa_window > 0
+    s = min(max_seq, cfg.swa_window) if ring else max_seq
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_bits == 8:
+        c = {
+            "k": jnp.zeros((batch, s, hk, dh), jnp.int8),
+            "v": jnp.zeros((batch, s, hk, dh), jnp.int8),
+            "k_s": jnp.zeros((batch, s, hk), jnp.bfloat16),
+            "v_s": jnp.zeros((batch, s, hk), jnp.bfloat16),
+        }
+    elif cfg.kv_bits == 4:  # two nibbles packed per byte along head_dim
+        ng = dh // _kv4_group(dh)
+        c = {
+            "k": jnp.zeros((batch, s, hk, dh // 2), jnp.uint8),
+            "v": jnp.zeros((batch, s, hk, dh // 2), jnp.uint8),
+            "k_s": jnp.zeros((batch, s, hk, ng), jnp.bfloat16),
+            "v_s": jnp.zeros((batch, s, hk, ng), jnp.bfloat16),
+        }
+    else:
+        c = {
+            "k": jnp.zeros((batch, s, hk, dh), dtype),
+            "v": jnp.zeros((batch, s, hk, dh), dtype),
+        }
+    if ring:
+        c["kv_pos"] = jnp.full((s,), -1, jnp.int32)
+    return c
+
+
+def _kv_quant(x, nbits: int = 8):
+    """(B,T,Hk,dh) -> (int8 / nibble-packed uint8, (B,T,Hk) bf16 scales)."""
+    xf = x.astype(jnp.float32)
+    if nbits == 8:
+        s = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+        q = jnp.round(xf / s[..., None]).astype(jnp.int8)
+        return q, s.astype(jnp.bfloat16)
+    # 4-bit: values in [-7, 7] stored as [1, 15], two per byte, GROUP-wise
+    # scales along head_dim (groups of <=32: per-token-head scales are too
+    # coarse for 4 bits). This is the 3D-stacked compression semantics:
+    # sub-byte planes packed into byte words + per-group affine params.
+    dh = x.shape[-1]
+    g = _kv4_group(dh)
+    xg = xf.reshape(*xf.shape[:-1], dh // g, g)
+    s = jnp.max(jnp.abs(xg), axis=-1) / 7.0 + 1e-8          # (..., dh/g)
+    q = jnp.clip(jnp.round(xg / s[..., None]), -7, 7).astype(jnp.int32) + 8
+    q = q.reshape(*xf.shape[:-1], dh)
+    packed = (q[..., 0::2] | (q[..., 1::2] << 4)).astype(jnp.uint8)
+    return packed, s.astype(jnp.bfloat16)
+
+
+def _kv4_group(dh: int) -> int:
+    g = min(32, dh)
+    while dh % (2 * g):  # groups must hold whole packed byte pairs
+        g //= 2
+    return max(g, 2)
+
+
+def _kv_dequant(q, s, nbits: int = 8, dtype=jnp.bfloat16):
+    if nbits == 8:
+        return q.astype(dtype) * s[..., None].astype(dtype)
+    dh = q.shape[-1] * 2
+    g = _kv4_group(dh)
+    qi = q.astype(jnp.int32)
+    lo = (qi & 0xF) - 8
+    hi = ((qi >> 4) & 0xF) - 8
+    x = jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1], dh // g, g)
+    x = x.astype(dtype) * s[..., None].astype(dtype)
+    return x.reshape(*q.shape[:-1], dh)
+
+
+def _mask(q_pos, kv_pos, *, causal, window, grouped: bool):
+    """Boolean mask, broadcastable over scores.
+
+    grouped=False -> (B,1,T,S) for q-head-major scores (B,H,T,S);
+    grouped=True  -> (B,1,1,T,S) for grouped scores (B,Hk,rep,T,S).
+    """
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None]
+    if grouped:
+        qp = q_pos[:, None, None, :, None]
+        kp = kv_pos[:, None, None, None, :]
+    else:
+        qp = q_pos[:, None, :, None]
+        kp = kv_pos[:, None, None, :]
+    mask = kp >= 0
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    return mask
+
+
+def _sdpa(q, k, v, q_pos, kv_pos, *, causal, window, dtype):
+    """q (B,T,H,dh) x k/v (B,S,Hk,dh) -> (B,T,H,dh).
+
+    T > 1 (train/prefill): KV expand to full query heads so every score
+    tensor dim shards evenly over 'model' (GQA kv-head counts like 8 do
+    NOT divide a 16-way model axis — sharding the packed q-head dim is the
+    TPU-native megatron layout; the kv repeat is a cheap transient).
+    T == 1 (decode): grouped einsum, KV stays (Hk) — the cache is the
+    dominant footprint and stays un-duplicated.
+    """
+    b, t, h, dh = q.shape
+    hk = k.shape[2]
+    rep = h // hk
+    scale = 1.0 / jnp.sqrt(float(dh))
+    if t > 1 or rep == 1:
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        k = constrain(k, "batch", None, "heads", None)
+        v = constrain(v, "batch", None, "heads", None)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k.astype(q.dtype))
+        scores = scores.astype(jnp.float32) * scale
+        scores = constrain(scores, "batch", "heads", None, None)
+        if q_pos is not None:
+            m = _mask(q_pos, kv_pos, causal=causal, window=window,
+                      grouped=False)
+            scores = jnp.where(m, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        return jnp.einsum("bhts,bshd->bthd", probs, v.astype(dtype))
+    qg = q.reshape(b, t, hk, rep, dh)
+    scores = jnp.einsum("bthrd,bshd->bhrts", qg, k.astype(qg.dtype))
+    scores = scores.astype(jnp.float32) * scale
+    if q_pos is not None:
+        m = _mask(q_pos, kv_pos, causal=causal, window=window, grouped=True)
+        scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bhrts,bshd->bthrd", probs, v.astype(dtype))
+    return out.reshape(b, t, h, dh)
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, *, causal, window, dtype, q_chunk):
+    """Query-chunked attention: scan over row blocks of the score matrix."""
+    b, t, h, dh = q.shape
+    pad = (-t) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded queries get the last valid position: rows stay finite
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), mode="edge")
+    nc = q.shape[1] // q_chunk
+    qc = q.reshape(b, nc, q_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(b, nc, q_chunk).transpose(1, 0, 2)
+
+    def body(_, inp):
+        q_i, p_i = inp
+        o = _sdpa(q_i, k, v, p_i, kv_pos, causal=causal, window=window,
+                  dtype=dtype)
+        return None, o
+
+    with jax.named_scope("qchunk_scan"):
+        _, outs = jax.lax.scan(body, None, (qc, pc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * q_chunk, h, dh)
+    return out[:, :t]
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array | None = None,
+    cache: dict | None = None,
+    cache_pos: jax.Array | int | None = None,
+    kv_src: jax.Array | None = None,   # cross-attention memory (B, S, D)
+    causal: bool = True,
+    use_rope: bool = True,
+    q_chunk: int = 1024,
+):
+    """Returns (out (B,T,D), new_cache | None).
+
+    Modes:
+      - self, no cache: training/scoring; q-chunked when T > q_chunk.
+      - self, cache: decode/prefill-into-cache; writes T tokens at
+        ``cache_pos`` then attends over the cache (ring or full).
+      - cross (kv_src set, no cache): attends over kv_src, no mask.
+      - cross, cache: kv_src may be None; uses precomputed cache['k'/'v'].
+    """
+    b, t, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // hk
+    # declare compute layout: FSDP'd weights all-gather over 'data' here
+    # (a ~100MB weight gather beats XLA's alternative of psum-ing GB-scale
+    # activations over 'data' after a partial contraction)
+    wq = constrain(p["wq"], None, "qkv_compute")
+    wk = constrain(p["wk"], None, "qkv_compute")
+    wv = constrain(p["wv"], None, "qkv_compute")
+    wo = constrain(p["wo"], "qkv_compute", None)
+    q = dense(x, wq).reshape(b, t, h, dh)
+    q = constrain(q, "batch", None, "heads", None)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    cross = kv_src is not None or (cache is not None and "kv_pos" not in cache
+                                   and cache_pos is None)
+    if kv_src is not None or not cross:
+        src = kv_src if kv_src is not None else x
+        k = dense(src, wk).reshape(b, -1, hk, dh)
+        v = dense(src, wv).reshape(b, -1, hk, dh)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+    else:
+        k = v = None  # cross decode: cache holds precomputed enc K/V
+
+    if use_rope and not cross:
+        cos, sin = rope(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    kv_pos = None
+    if cross:
+        if cache is not None:
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        kv_pos = jnp.arange(k.shape[1])
+        q_pos = positions  # with causal=False/window=0 the mask is all-true
+        causal = False
+        window = 0
+    elif cache is not None:
+        s = cache["k"].shape[1]
+        ring = "kv_pos" in cache
+        quant = "k_s" in cache
+        nbits = 0
+        if quant:  # QGTC bit compression on the decode-dominant KV stream
+            nbits = 4 if cache["k"].shape[-1] == dh // 2 else 8
+            kq, ks = _kv_quant(k, nbits)
+            vq, vs = _kv_quant(v, nbits)
+        if ring:
+            if t >= s:  # prompt longer than the window: keep the tail only
+                k, v = k[:, t - s:], v[:, t - s:]
+                if quant:
+                    kq, ks = kq[:, t - s:], ks[:, t - s:]
+                    vq, vs = vq[:, t - s:], vs[:, t - s:]
+                woff = cache_pos + (t - s)
+                t_w = s
+            else:
+                woff, t_w = cache_pos, t
+            idx = (woff + jnp.arange(t_w)) % s
+            new_cache = {
+                "k": cache["k"].at[:, idx].set(
+                    (kq if quant else k).astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, idx].set(
+                    (vq if quant else v).astype(cache["v"].dtype)),
+                "kv_pos": cache["kv_pos"].at[idx].set(woff + jnp.arange(t_w)),
+            }
+            if quant:
+                new_cache["k_s"] = cache["k_s"].at[:, idx].set(ks)
+                new_cache["v_s"] = cache["v_s"].at[:, idx].set(vs)
+            kv_pos = new_cache["kv_pos"]
+        else:
+            def upd(buf, val):
+                off = (0, cache_pos) + (0,) * (buf.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    buf, val.astype(buf.dtype), off)
+
+            new_cache = {"k": upd(cache["k"], kq if quant else k),
+                         "v": upd(cache["v"], vq if quant else v)}
+            if quant:
+                new_cache["k_s"] = upd(cache["k_s"], ks)
+                new_cache["v_s"] = upd(cache["v_s"], vs)
+            kv_pos = jnp.arange(s)
+        if quant:
+            k = _kv_dequant(new_cache["k"], new_cache["k_s"], nbits)
+            v = _kv_dequant(new_cache["v"], new_cache["v_s"], nbits)
+        else:
+            k, v = new_cache["k"], new_cache["v"]
+        q_pos = positions
+        window = cfg.swa_window
+    else:
+        # self-attention without cache: kv positions == query positions
+        q_pos = positions
+        kv_pos = positions
+        window = cfg.swa_window
+
+    if t > q_chunk:
+        out = _sdpa_chunked(q, k, v, q_pos, kv_pos, causal=causal,
+                            window=window, dtype=x.dtype, q_chunk=q_chunk)
+    else:
+        out = _sdpa(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                    dtype=x.dtype)
+    out = out.reshape(b, t, h * dh)
+    out = dense(out, wo)
+    return constrain(out, "batch", None, None), new_cache
+
+
+def prefill_attn_cache(p, x, cfg: ModelConfig, max_seq: int,
+                       positions=None, dtype=jnp.bfloat16):
+    """Compute K/V for a prompt and place them in a fresh full cache."""
+    b, t, _ = x.shape
+    cache = init_attn_cache(cfg, b, max_seq, dtype=dtype, ring=False)
+    out, cache = attention(p, x, cfg, positions=positions, cache=cache,
+                           cache_pos=0)
+    return out, cache
+
+
+def cross_kv(p: dict, src: jax.Array, cfg: ModelConfig) -> dict:
+    """Precompute cross-attention K/V from encoder states (B, S, D)."""
+    b = src.shape[0]
+    hk, dh = cfg.n_kv_heads, cfg.head_dim
+    k = dense(src, p["wk"]).reshape(b, -1, hk, dh)
+    v = dense(src, p["wv"]).reshape(b, -1, hk, dh)
+    return {"k": k, "v": v}
+
+
+# ----------------------------------------------------------------------- FFN
+
+def init_mlp(ini: Initializer, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": ini.normal((d, f), ("embed", "mlp")),
+            "wu": ini.normal((d, f), ("embed", "mlp")),
+            "wd": ini.normal((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w1": ini.normal((d, f), ("embed", "mlp")),
+        "w2": ini.normal((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "wg" in p:
+        h = jax.nn.silu(dense(x, constrain(p["wg"], None, "mlp_compute"))) \
+            * dense(x, constrain(p["wu"], None, "mlp_compute"))
+        h = constrain(h, "batch", None, "mlp_act")
+        return dense(h, constrain(p["wd"], "mlp_compute", None))
+    h = dense(x, constrain(p["w1"], None, "mlp_compute"))
+    if cfg.mlp_type == "relu2":   # nemotron / minitron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "mlp_act")
+    return dense(h, constrain(p["w2"], "mlp_compute", None))
+
+
+# ----------------------------------------------------------------------- MoE
+
+def init_moe(ini: Initializer, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    # storage: experts shard over 'data'; in train the FFN dim additionally
+    # shards over 'model' (256-way param+optimizer sharding) and the
+    # shard_map dispatch all-gathers each layer's expert weights on the fly
+    # (cheap vs. shipping activations); in serve the FFN dim stays whole.
+    return {
+        "router": ini.normal((d, e), ("embed", None), dtype=jnp.float32),
+        "wg": ini.normal((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wu": ini.normal((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wd": ini.normal((e, f, d), ("experts", "expert_mlp", "expert_embed")),
+    }
+
+
+def _auto_groups(s: int, cap_groups: int = 32) -> int:
+    g = 1
+    while g < cap_groups and s % (g * 2) == 0:
+        g *= 2
+    return g
+
+
+def _moe_route(p, xs, cfg: ModelConfig, cap: int):
+    """Group-local routing. xs (G, Sg, D) -> (sel (G,E,C), weight (G,E,C))."""
+    g, sg, d = xs.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    logits = jnp.einsum("gsd,de->gse", xs.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = jax.lax.top_k(gates, k)  # (G, Sg, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, -1, keepdims=True), 1e-9)
+    combine = jnp.zeros((g, sg, e), jnp.float32)
+    combine = combine.at[
+        jnp.arange(g)[:, None, None], jnp.arange(sg)[None, :, None], top_i
+    ].set(top_g)
+    mask = combine > 0
+    # per-(group, expert) token selection: first C tokens in order
+    pri = jnp.where(mask, -jnp.arange(sg, dtype=jnp.float32)[None, :, None],
+                    NEG_INF)
+    _, sel = jax.lax.top_k(pri.transpose(0, 2, 1), cap)  # (G, E, C)
+    valid = jnp.take_along_axis(mask.transpose(0, 2, 1), sel, axis=2)
+    gate_ec = jnp.take_along_axis(combine.transpose(0, 2, 1), sel, axis=2)
+    return sel, (gate_ec * valid).astype(xs.dtype), valid
+
+
+def _moe_gather(xs, sel):
+    g, sg, d = xs.shape
+    _, e, cap = sel.shape
+    return jax.vmap(lambda xg, ig: xg[ig])(
+        xs, sel.reshape(g, e * cap)).reshape(g, e, cap, d)
+
+
+def _moe_scatter(sel, vals, sg):
+    g, e, cap, d = vals.shape
+    return jax.vmap(
+        lambda idx, v: jnp.zeros((sg, d), vals.dtype).at[idx].add(v))(
+        sel.reshape(g, e * cap), vals.reshape(g, e * cap, d))
+
+
+def _moe_ffn(wg, wu, wd, gath, weight):
+    """Expert FFN over dispatched tokens (G, E', C, D); weight (G, E', C)."""
+    gath = gath * (weight[..., None] > 0).astype(gath.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gath, wg.astype(gath.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", gath, wu.astype(gath.dtype))
+    out_e = jnp.einsum("gecf,efd->gecd", h, wd.astype(h.dtype))
+    return out_e * weight[..., None]
+
+
+def moe(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token-choice top-k with per-group capacity (grouped sort dispatch).
+
+    Tokens are split into G groups aligned with the data-parallel axis.
+    Each expert takes its first-C assigned tokens per group
+    (C = Sg*k/E * capacity_factor); over-capacity tokens fall through the
+    residual — GShard semantics with group-local capacity.
+
+    Two execution paths with IDENTICAL math:
+      - shard_map (active when a mesh context with a sharded dp axis is
+        installed): routing/gather/scatter run shard-local; the
+        group<->expert transpose is an explicit all_to_all over 'data'
+        (expert parallelism stays pod-local; DP across pods). The 'model'
+        axis stays in GSPMD auto mode, so expert FFN weights keep megatron
+        TP. This avoids GSPMD's pathological handling of batched
+        gather/scatter (it otherwise replicates dispatch tensors and
+        all-reduces their gradients).
+      - pure jnp fallback for single-device tests/examples.
+    """
+    from repro.dist.sharding import current_ctx
+
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    s = b * t
+    g = cfg.moe_groups or _auto_groups(s)
+    sg = s // g
+    cap = max(4, int(sg * k / e * cfg.capacity_factor))
+    cap = min(cap, sg)
+    xs = x.reshape(g, sg, d)
+
+    ctx = current_ctx()
+    dp: tuple = ()
+    n_data = n_model = 1
+    if ctx is not None:
+        mesh, rules = ctx
+        dpr = rules.get("moe_group")
+        if dpr:
+            dp = (dpr,) if isinstance(dpr, str) else tuple(dpr)
+            dp = tuple(a for a in dp if mesh.shape[a] > 1)
+        n_data = mesh.shape.get("data", 1)
+        n_model = mesh.shape.get("model", 1)
+    use_sm = (dp and "data" in dp and e % n_data == 0
+              and g % _prod(ctx[0].shape[a] for a in dp) == 0)
+
+    if not use_sm:
+        xs = constrain(xs, "moe_group", None, None)
+        sel, weight, valid = _moe_route(p, xs, cfg, cap)
+        gath = _moe_gather(xs, sel)
+        gath = constrain(gath, None, "experts_act", None, None)
+        out_e = _moe_ffn(p["wg"], p["wu"], p["wd"], gath, weight)
+        out_e = constrain(out_e, None, "experts_act", None, None)
+        out = _moe_scatter(sel, out_e, sg)
+        out = constrain(out, "moe_group", None, None)
+        return out.reshape(b, t, d)
+
+    from jax.sharding import PartitionSpec as P
+
+    mesh, rules = ctx
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    # pad capacity to a multiple of the model axis: the capacity dim of the
+    # dispatch tensors splits over 'model' (each model rank ships C/n_model
+    # slots), so the expert FFN runs with WHOLE per-expert weights and zero
+    # collectives; only the small combined output psums over 'model'.
+    cap_pad = -(-cap // n_model) * n_model
+
+    mlp_axis = rules.get("expert_mlp") if ctx is not None else None
+    gather_w = mlp_axis == "model" and n_model > 1
+
+    def local_fn(xs_blk, router, wg, wu, wd):
+        # xs_blk (G_loc, Sg, D); wg/wu/wd E-sharded over 'data'
+        if gather_w:  # FSDP-style: reassemble this layer's expert FFN weights
+            wg = jax.lax.all_gather(wg, "model", axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, "model", axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, "model", axis=1, tiled=True)
+        sel, weight, valid = _moe_route({"router": router}, xs_blk, cfg, cap)
+        if cap_pad != cap:  # pad with weight-0 slots pointing at token 0
+            pads = [(0, 0), (0, 0), (0, cap_pad - cap)]
+            sel = jnp.pad(sel, pads)
+            weight = jnp.pad(weight, pads)
+        c_loc = cap_pad // n_model
+        ridx = jax.lax.axis_index("model") if n_model > 1 else 0
+        sel_l = jax.lax.dynamic_slice_in_dim(sel, ridx * c_loc, c_loc, axis=2)
+        w_l = jax.lax.dynamic_slice_in_dim(weight, ridx * c_loc, c_loc, axis=2)
+        gath = _moe_gather(xs_blk, sel_l)                   # (G_loc, E, Cl, D)
+        # group -> expert transpose (pod-local all-to-all over 'data')
+        gath = jax.lax.all_to_all(gath, "data", split_axis=1, concat_axis=0,
+                                  tiled=True)               # (G_pod, E_loc, Cl, D)
+        w_a2a = jax.lax.all_to_all(w_l, "data", split_axis=1,
+                                   concat_axis=0, tiled=True)
+        out_e = _moe_ffn(wg, wu, wd, gath, w_a2a)
+        # expert -> group transpose back
+        out_e = jax.lax.all_to_all(out_e, "data", split_axis=0, concat_axis=1,
+                                   tiled=True)              # (G_loc, E, Cl, D)
+        part = _moe_scatter(sel_l, out_e, sg)
+        if n_model > 1:
+            part = jax.lax.psum(part, "model")
+        return part
+
+    manual = set(dp) | ({"model"} if n_model > 1 else set())
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(None, None),
+                  P("data", None, mlp_axis), P("data", None, mlp_axis),
+                  P("data", mlp_axis, None)),
+        out_specs=P(dp_spec, None, None),
+        axis_names=manual,
+        check_vma=False,
+    )
+    out = fn(xs, p["router"], p["wg"], p["wu"], p["wd"])
+    return out.reshape(b, t, d)
+
+
+def _prod(it):
+    r = 1
+    for x in it:
+        r *= x
+    return r

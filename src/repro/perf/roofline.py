@@ -1,0 +1,174 @@
+"""Three-term roofline model from compiled dry-run artifacts (TPU v5e class).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = effective_link_bytes_per_device / ICI_bw
+
+``compiled.cost_analysis()`` is the per-device (post-SPMD) program, so all
+three terms are per-device seconds and directly comparable: the largest is
+the bottleneck. Collective bytes are NOT in cost_analysis — we parse the
+post-SPMD HLO text and apply ring-algorithm effective-byte formulas per op:
+
+  all-gather(out S, group g):       S * (g-1)/g
+  reduce-scatter(out S, group g):   S * (g-1)          (input = S*g)
+  all-reduce(out S, group g):       2 * S * (g-1)/g    (RS + AG)
+  all-to-all(out S, group g):       S * (g-1)/g
+  collective-permute(out S):        S
+
+Hardware constants (v5e class): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (one effective link per chip per collective hop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
+           "parse_hlo_collectives"]
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.I)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).strip("{}").split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def parse_hlo_collectives(hlo_text: str, default_group: int = 1,
+                          trips: dict | None = None) -> list[dict]:
+    """Every collective op in a (post-SPMD, per-device) HLO module.
+
+    ``trips`` maps named-scope names (see lm._scan) to scan trip counts:
+    XLA's HLO contains each while body once, so a collective whose
+    op_name metadata carries scope s executes trips[s] times per step.
+    Nested scopes multiply.
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2).lower()
+        size = _shape_bytes(result_type)
+        if size == 0:
+            continue
+        g = _group_size(line, default_group)
+        if op == "all-gather":
+            eff = size * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            eff = size * (g - 1)
+        elif op == "all-reduce":
+            eff = 2 * size * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            eff = size * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            eff = size
+        mult = 1
+        if trips:
+            meta = _META_RE.search(line)
+            if meta:
+                for scope, n in trips.items():
+                    if scope in meta.group(1):
+                        mult *= max(1, int(n))
+        out.append({"op": op, "result_bytes": size, "group": g,
+                    "effective_bytes": eff * mult, "trip_mult": mult})
+    return out
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1,
+                     trips: dict | None = None) -> dict:
+    ops = parse_hlo_collectives(hlo_text, default_group, trips)
+    by_op: dict = {}
+    for o in ops:
+        d = by_op.setdefault(o["op"], {"count": 0, "result_bytes": 0,
+                                       "effective_bytes": 0.0})
+        d["count"] += o["trip_mult"]
+        d["result_bytes"] += o["result_bytes"] * o["trip_mult"]
+        d["effective_bytes"] += o["effective_bytes"]
+    return {
+        "total_effective_bytes": sum(o["effective_bytes"] for o in ops),
+        "n_collective_sites": len(ops),
+        "n_collective_execs": sum(o["trip_mult"] for o in ops),
+        "by_op": by_op,
+    }
+
+
+def model_flops(n_params: int, n_tokens: int, kind: str = "train",
+                n_active_params: int | None = None) -> float:
+    """6*N*D for train, 2*N*D per forward (MoE: N = active params)."""
+    n = n_active_params if n_active_params is not None else n_params
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * n_tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: float
+    useful_flops_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * n_devices)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float, *, n_devices: int,
+                   model_flops_total: float = 0.0,
+                   extra_flops: float = 0.0,
+                   extra_bytes: float = 0.0) -> RooflineReport:
+    """extra_* add analytic Pallas-kernel costs (invisible to XLA)."""
+    f = flops_per_device + extra_flops
+    by = bytes_per_device + extra_bytes
+    c = f / HW["peak_flops_bf16"]
+    m = by / HW["hbm_bw"]
+    k = coll_bytes_per_device / HW["ici_bw"]
+    terms = {"compute": c, "memory": m, "collective": k}
+    bottleneck = max(terms, key=terms.get)
+    ratio = (model_flops_total / (f * n_devices)) if f > 0 else 0.0
+    return RooflineReport(c, m, k, bottleneck, f, by, coll_bytes_per_device,
+                          model_flops_total, ratio)

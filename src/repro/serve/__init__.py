@@ -1,0 +1,1 @@
+# Serving substrate: batched subgraph inference + LM decode engines.

@@ -1,0 +1,1 @@
+# Training substrate: in-repo optimizers, QAT, GNN trainer, token pipeline.

@@ -1,0 +1,64 @@
+"""Deterministic, counter-addressed synthetic LM data pipeline.
+
+Resumability contract (fault tolerance): batch(step) is a PURE function of
+(seed, step) — no file offsets, no iterator state. A job that restarts from
+a checkpoint at step N regenerates exactly the batches N, N+1, ... that the
+dead job would have seen, on any host topology (each host can slice its
+rows from the same global batch deterministically).
+
+The stream is a learnable synthetic language so end-to-end training shows
+real loss movement: each sequence follows an affine recurrence
+``tok[t+1] = (a * tok[t] + c) % V`` with (a, c) drawn per-sequence from a
+small set of "dialects" — next-token prediction is solvable once the model
+identifies the dialect (a few tokens of context), so loss drops fast and
+monotonically for a working trainer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["synthetic_batch", "batch_for_arch"]
+
+_DIALECTS_A = (5, 13, 29, 37)
+_DIALECTS_C = (7, 11, 3, 17)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq", "vocab"))
+def synthetic_batch(seed: jax.Array, step: jax.Array, *, batch: int,
+                    seq: int, vocab: int):
+    """(tokens, labels) for ``step``; pure in (seed, step)."""
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(0), seed),
+                             step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = min(vocab, 256)  # small working set => fast learnability
+    start = jax.random.randint(k1, (batch,), 0, v)
+    dial = jax.random.randint(k2, (batch,), 0, len(_DIALECTS_A))
+    a = jnp.asarray(_DIALECTS_A)[dial]
+    c = jnp.asarray(_DIALECTS_C)[dial]
+
+    def step_fn(tok, _):
+        nxt = (a * tok + c) % v
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step_fn, start, None, length=seq)
+    tokens = jnp.concatenate([start[:, None], toks.T[:, :-1]], axis=1)
+    labels = toks.T
+    return tokens.astype(jnp.int32), labels.astype(jnp.int32)
+
+
+def batch_for_arch(cfg, seed: int, step: int, batch: int, seq: int) -> dict:
+    """Full input dict for any assigned arch (stub modality tensors incl.)."""
+    tokens, labels = synthetic_batch(jnp.asarray(seed), jnp.asarray(step),
+                                     batch=batch, seq=seq, vocab=cfg.vocab)
+    out = {"tokens": tokens, "labels": labels}
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+    if cfg.family == "vlm":
+        out["patches"] = 0.1 * jax.random.normal(
+            key, (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio_encdec":
+        out["frames"] = 0.1 * jax.random.normal(
+            key, (batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,114 @@
+"""Optimizers implemented in-repo: AdamW + SGD, gradient clipping, and
+int8 gradient compression with error feedback (the cross-pod all-reduce
+trick — reuses the paper's quantization machinery on gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "compress_grads", "decompress_grads", "CompressionState",
+           "compression_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # 0 = off
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state["nu"], grads)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1 ** t)
+    nu_hat_scale = 1.0 / (1 - b2 ** t)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        return (p - cfg.lr * (u + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}
+
+
+# ------------------------------------------------- gradient compression
+
+@dataclasses.dataclass(frozen=True)
+class CompressionState:
+    """Per-leaf error-feedback residuals (pytree mirroring grads)."""
+
+    residual: dict
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.residual,), None
+
+
+jax.tree_util.register_pytree_node(
+    CompressionState,
+    lambda s: ((s.residual,), None),
+    lambda _, c: CompressionState(*c),
+)
+
+
+def compression_init(grads_like):
+    return CompressionState(jax.tree.map(jnp.zeros_like, grads_like))
+
+
+def compress_grads(grads, state: CompressionState, nbits: int = 8):
+    """Symmetric per-leaf int8 quantization with error feedback.
+
+    Returns (quantized int8 pytree, scales pytree, new state). The caller
+    all-reduces the int8 payload (8/32 of the bytes) and decompresses; the
+    quantization error is fed back into the next step's gradients, which
+    keeps SGD/Adam convergence unbiased (error-feedback SGD).
+    """
+    qmax = float((1 << (nbits - 1)) - 1)
+
+    def comp(g, r):
+        v = g + r
+        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12) / qmax
+        q = jnp.clip(jnp.round(v / scale), -qmax, qmax).astype(jnp.int8)
+        new_r = v - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(state.residual)
+    qs, scales, rs = [], [], []
+    for g, r in zip(flat, rflat):
+        q, s, nr = comp(g, r)
+        qs.append(q)
+        scales.append(s)
+        rs.append(nr)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            CompressionState(jax.tree.unflatten(treedef, rs)))
+
+
+def decompress_grads(qgrads, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qgrads, scales)

@@ -1,0 +1,138 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Every kernel x {shapes incl. non-tile-divisible, bitwidths, jump modes}
+asserts EXACT integer equality against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops, zerotile
+from repro.core.quantize import calibrate
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _rand_binary(rng, m, k, density=0.3):
+    return (rng.random((m, k)) < density).astype(np.int32)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 8), (16, 256, 128), (40, 300, 50),
+                                   (1, 32, 1), (130, 1000, 17)])
+@pytest.mark.parametrize("jump", ["none", "mask", "compact"])
+def test_bgemm_jump_modes(m, k, n, jump):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = _rand_binary(rng, m, k, 0.05)
+    b = _rand_binary(rng, k, n, 0.5)
+    ap = bitops.pack_a(jnp.asarray(a), 1)[0]
+    bp = bitops.pack_b(jnp.asarray(b), 1)[0]
+    got = kops.bgemm(ap, bp, jump=jump)
+    np.testing.assert_array_equal(np.asarray(got), a @ b)
+
+
+@pytest.mark.parametrize("mode", ["vpu", "mxu"])
+def test_bgemm_compute_modes(mode):
+    rng = np.random.default_rng(7)
+    a = _rand_binary(rng, 24, 200, 0.2)
+    b = _rand_binary(rng, 200, 40, 0.5)
+    ap = bitops.pack_a(jnp.asarray(a), 1)[0]
+    bp = bitops.pack_b(jnp.asarray(b), 1)[0]
+    got = kops.bgemm(ap, bp, mode=mode)
+    np.testing.assert_array_equal(np.asarray(got), a @ b)
+
+
+@pytest.mark.parametrize("s,t", [(1, 1), (2, 3), (4, 4), (8, 2), (3, 8)])
+@pytest.mark.parametrize("m,k,n", [(8, 128, 8), (33, 190, 29)])
+def test_bitserial_gemm_sweep(s, t, m, k, n):
+    rng = np.random.default_rng(s * 100 + t)
+    a = rng.integers(0, 1 << s, (m, k)).astype(np.int32)
+    b = rng.integers(0, 1 << t, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), s)
+    bp = bitops.pack_b(jnp.asarray(b), t)
+    got = kops.bitserial_gemm(ap, bp)
+    want = kref.bitserial_gemm_ref(ap, bp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), a.astype(np.int64) @ b)
+
+
+@pytest.mark.parametrize("out_bits,relu", [(8, True), (4, False), (2, True)])
+def test_bitserial_fused_epilogue(out_bits, relu):
+    rng = np.random.default_rng(11)
+    s, t, m, k, n = 2, 3, 24, 160, 32
+    a = rng.integers(0, 1 << s, (m, k)).astype(np.int32)
+    b = rng.integers(0, 1 << t, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), s)
+    bp = bitops.pack_b(jnp.asarray(b), t)
+    alpha = jnp.asarray(rng.random((m, 1)) * 0.01, jnp.float32)
+    beta = jnp.asarray(rng.random((1, n)), jnp.float32)
+    got = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=out_bits,
+                               relu=relu)
+    want = kref.bitserial_fused_ref(ap, bp, alpha, beta, out_bits, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nbits", [1, 2, 5, 8])
+@pytest.mark.parametrize("m,k", [(8, 256), (20, 100), (129, 33)])
+def test_bitpack_kernel(nbits, m, k):
+    rng = np.random.default_rng(nbits * 10 + m)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    qp = calibrate(jnp.asarray(x), nbits)
+    got = kops.bitpack(jnp.asarray(x), qp.scale, qp.zero, nbits=nbits)
+    want = kref.bitpack_ref(jnp.asarray(x), qp)
+    w = want.shape[2]
+    np.testing.assert_array_equal(np.asarray(got)[:, :, :w], np.asarray(want))
+    # padding words (if any) must be zero
+    if got.shape[2] > w:
+        assert not np.asarray(got)[:, :, w:].any()
+
+
+def test_zero_tile_occupancy_and_compaction():
+    rng = np.random.default_rng(5)
+    a = np.zeros((64, 512), np.int32)
+    a[:8, :128] = _rand_binary(rng, 8, 128, 0.5)   # one dense block
+    ap = bitops.pack_a(jnp.asarray(a), 1)[0]
+    ap = bitops.pad_to(bitops.pad_to(ap, 0, 8), 1, 4)
+    occ = zerotile.tile_occupancy(ap, 8, 4)
+    stats = zerotile.occupancy_stats(occ)
+    assert stats["tiles_nonzero"] == 1
+    idx, cnt = zerotile.compact_tiles(occ)
+    assert int(cnt[0]) == 1 and int(cnt[1]) == 0
+    assert int(idx[0, 0]) == 0
+
+
+def test_zero_tile_jumping_saves_work_matches_dense():
+    """Block-diagonal adjacency (the batching pattern): compact == plain."""
+    rng = np.random.default_rng(9)
+    blocks = [_rand_binary(rng, 64, 64, 0.4) for _ in range(4)]
+    n = 256
+    a = np.zeros((n, n), np.int32)
+    for i, blk in enumerate(blocks):
+        a[i * 64:(i + 1) * 64, i * 64:(i + 1) * 64] = blk
+    x = _rand_binary(rng, n, 64, 0.5)
+    ap = bitops.pack_a(jnp.asarray(a), 1)[0]
+    xp = bitops.pack_b(jnp.asarray(x), 1)[0]
+    for jump in ("mask", "compact"):
+        got = kops.bgemm(ap, xp, jump=jump)
+        np.testing.assert_array_equal(np.asarray(got), a @ x)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 128, 256), (8, 256, 512), (5, 160, 64)])
+@pytest.mark.parametrize("group", [32, 16])
+def test_wq_gemm_4bit_weight_matmul(m, k, n, group):
+    """QGTC weight compression on the decode GEMV: kernel == oracle, and
+    the dequantized matmul tracks the float matmul within 4-bit error."""
+    from repro.kernels.wqmm import pack_w4
+
+    rng = np.random.default_rng(m * 7 + k + n + group)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wp, s = pack_w4(w, group=group)
+    got = kops.wq_gemm(x, wp, s, group=group)
+    want = kref.wq_gemm_ref(x, wp, s, group=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # 4-bit quantization error bound vs the float matmul
+    exact = np.asarray(x @ w)
+    err = np.abs(np.asarray(got) - exact).max()
+    assert err <= float(jnp.max(jnp.abs(x))) * k * (1.0 / 7.0) * 0.5

@@ -1,0 +1,81 @@
+"""Roofline parser + analytic cost model unit tests."""
+import numpy as np
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.perf import kernel_cost, roofline
+
+HLO_SNIPPET = """
+HloModule test
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, metadata={op_name="jit(f)/layers_scan/while/body/dot"}
+  %all-gather.2 = bf16[64,512]{1,0} all-gather(%y), replica_groups=[16,16]<=[256], dimensions={0}, metadata={op_name="jit(f)/outside"}
+  %reduce-scatter.3 = f32[32]{0} reduce-scatter(%z), replica_groups={{0,1}}, metadata={op_name="jit(f)/ce_scan/while/body/g"}
+  %all-to-all.4 = bf16[8,8]{1,0} all-to-all(%w), replica_groups={{0,1,2,3,4,5,6,7}}, metadata={op_name="jit(f)/moe"}
+  %collective-permute.5 = f32[16]{0} collective-permute(%v), metadata={op_name="jit(f)/pipe"}
+"""
+
+
+def test_collective_parser_shapes_groups_and_formulas():
+    ops = roofline.parse_hlo_collectives(HLO_SNIPPET)
+    by = {o["op"]: o for o in ops}
+    # all-reduce: 128*256*4 bytes, g=4 -> 2*S*(g-1)/g
+    ar = by["all-reduce"]
+    assert ar["result_bytes"] == 128 * 256 * 4 and ar["group"] == 4
+    assert np.isclose(ar["effective_bytes"], 2 * ar["result_bytes"] * 3 / 4)
+    # all-gather iota groups [16,16] -> g=16
+    ag = by["all-gather"]
+    assert ag["group"] == 16 and ag["result_bytes"] == 64 * 512 * 2
+    # reduce-scatter: S*(g-1)
+    rs = by["reduce-scatter"]
+    assert rs["effective_bytes"] == 32 * 4 * 1
+    assert by["collective-permute"]["effective_bytes"] == 16 * 4
+
+
+def test_collective_parser_trip_multipliers():
+    trips = {"layers_scan": 32, "ce_scan": 8}
+    ops = roofline.parse_hlo_collectives(HLO_SNIPPET, trips=trips)
+    by = {o["op"]: o for o in ops}
+    assert by["all-reduce"]["trip_mult"] == 32      # inside layers_scan
+    assert by["all-gather"]["trip_mult"] == 1       # outside any scope
+    assert by["reduce-scatter"]["trip_mult"] == 8   # inside ce_scan
+
+
+def test_roofline_terms_and_bottleneck():
+    rep = roofline.roofline_terms(
+        197e12, 819e9 * 2, 50e9 * 0.5, n_devices=256,
+        model_flops_total=197e12 * 256 * 0.5)
+    assert np.isclose(rep.compute_s, 1.0)
+    assert np.isclose(rep.memory_s, 2.0)
+    assert np.isclose(rep.collective_s, 0.5)
+    assert rep.bottleneck == "memory"
+    assert np.isclose(rep.useful_flops_ratio, 0.5)
+
+
+def test_analytic_cost_sanity():
+    cfg = configs.get("minitron-8b")
+    counts = kernel_cost.matmul_param_counts(cfg)
+    # matmul-visible params: ~6.7B (8B total minus the embed gather table)
+    assert 6e9 < counts["total"] < 11e9
+    train = kernel_cost.analytic_cost(cfg, SHAPES["train_4k"], 256,
+                                      counts["total"] * 2)
+    dec = kernel_cost.analytic_cost(cfg, SHAPES["decode_32k"], 256,
+                                    counts["total"] * 2)
+    # train is ~(4 passes x tokens) heavier than one decode token per seq
+    assert train.flops_per_device > dec.flops_per_device * 1e3
+    # decode is memory-dominated by weights + KV
+    assert dec.notes["kv_traffic_bytes"] > 0
+    # MoE active < total
+    moe = kernel_cost.matmul_param_counts(configs.get("olmoe-1b-7b"))
+    assert moe["active"] < moe["total"] / 3
+
+
+def test_scan_trip_counts_families():
+    t1 = kernel_cost.scan_trip_counts(configs.get("minitron-8b"),
+                                      SHAPES["train_4k"])
+    assert t1["layers_scan"] == 32 and t1["qchunk_scan"] == 4
+    t2 = kernel_cost.scan_trip_counts(configs.get("zamba2-7b"),
+                                      SHAPES["train_4k"])
+    assert t2["group_scan"] * t2["mamba_scan"] == 81
+    t3 = kernel_cost.scan_trip_counts(configs.get("codeqwen1.5-7b"),
+                                      SHAPES["decode_32k"])
+    assert t3["ce_scan"] == 1 and t3["qchunk_scan"] == 1

@@ -1,0 +1,102 @@
+"""Quantization (Eq. 2) + BitTensor API + affine-correction properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bittensor as bt
+from repro.core.qgemm import qgemm, weight_quantize, wq_matmul
+from repro.core.quantize import (QuantParams, affine_matmul_correction,
+                                 calibrate, dequantize, fake_quant, quantize)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 8), st.integers(1, 60), st.integers(0, 2**31 - 1))
+def test_quantize_range_and_monotone(nbits, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * 10, jnp.float32)
+    qp = calibrate(x, nbits)
+    q = quantize(x, qp)
+    assert int(q.min()) >= 0 and int(q.max()) <= (1 << nbits) - 1
+    order = np.argsort(np.asarray(x))
+    qs = np.asarray(q)[order]
+    assert (np.diff(qs) >= 0).all()  # quantization preserves order
+
+
+@given(st.integers(2, 8), st.integers(2, 50), st.integers(0, 2**31 - 1))
+def test_dequantize_error_bound(nbits, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    qp = calibrate(x, nbits)
+    err = np.abs(np.asarray(dequantize(quantize(x, qp), qp) - x))
+    assert err.max() <= float(qp.scale) * 1.001  # floor() -> one-step bound
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.linspace(-1, 1, 64)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, 4)))(x)
+    # STE: gradient ~1 in range (interior), 0 only outside clip range
+    assert float(jnp.mean(g)) > 0.9
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_affine_correction_recovers_float_matmul(s, t, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(9, 33)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(33, 7)), jnp.float32)
+    qa, qb = calibrate(a, s), calibrate(b, t)
+    aq, bq = quantize(a, qa), quantize(b, qb)
+    prod = qgemm(aq, bq, s, t, impl="dot")
+    approx = affine_matmul_correction(aq, bq, qa, qb, prod)
+    exact = dequantize(aq, qa) @ dequantize(bq, qb)
+    np.testing.assert_allclose(np.asarray(approx), np.asarray(exact),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_bittensor_roundtrip_and_mm():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(17, 40)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(40, 13)), jnp.float32)
+    ta = bt.to_bit(a, 3, pack_axis=1)
+    tb = bt.to_bit(b, 5, pack_axis=0)
+    # roundtrip: to_val(to_bit(x)) == quantize(x)
+    np.testing.assert_array_equal(np.asarray(bt.to_val(ta)),
+                                  np.asarray(quantize(a, ta.qp)))
+    # bitmm2int == integer matmul of the quantized values
+    got = bt.bitmm2int(ta, tb)
+    want = np.asarray(quantize(a, ta.qp)) @ np.asarray(quantize(b, tb.qp))
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # compression accounting
+    assert ta.nbytes < ta.logical_nbytes_fp32
+
+
+def test_bitmm2bit_requantizes_for_next_layer():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    ta, tb = bt.to_bit(a, 4, pack_axis=1), bt.to_bit(b, 4, pack_axis=0)
+    out = bt.bitmm2bit(ta, tb, out_bits=4)
+    assert out.nbits == 4 and out.shape == (16, 8) and out.pack_axis == 1
+    v = bt.to_val(out)
+    assert int(v.min()) >= 0 and int(v.max()) <= 15
+
+
+def test_bittensor_is_pytree():
+    a = bt.to_bit(jnp.ones((8, 32)), 2)
+    leaves, treedef = jax.tree.flatten(a)
+    b = jax.tree.unflatten(treedef, leaves)
+    assert b.nbits == a.nbits and b.shape == a.shape
+
+
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_weight_only_quant_matmul(nbits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(5, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 12)), jnp.float32)
+    wq = weight_quantize(w, nbits)
+    got = np.asarray(wq_matmul(x, wq, out_dtype=jnp.float32))
+    want = np.asarray(x @ w)
+    tol = float(jnp.max(jnp.abs(w))) * 24 * 2 ** (1 - nbits)
+    assert np.abs(got - want).max() <= tol
