@@ -4,7 +4,8 @@ and Batched-GIN across Table-1 datasets.
 Baselines implemented in-repo (the paper compares against DGL/PyG):
   fp32_dense — dense-adjacency fp32 matmuls (DGL dense analogue)
   fp32_csr   — edge-list gather/segment-sum (DGL/PyG scatter analogue)
-  qgtc       — integer bit-serial path (impl=dot: the XLA/MXU emulation)
+  qgtc       — integer bit-serial path (xla_dot backend: the XLA/MXU
+               emulation, the repro.api registry default)
 
 Datasets are SBM re-creations of Table 1 at --scale (structure statistics
 preserved); the claim validated is the RELATIVE speedup shape: QGTC gains

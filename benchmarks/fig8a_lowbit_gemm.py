@@ -32,7 +32,8 @@ def main():
         for bits in (2, 3, 4, 7):
             aq = jnp.asarray(rng.integers(0, 1 << bits, (n, n)), jnp.int32)
             bq = jnp.asarray(rng.integers(0, 1 << bits, (n, d)), jnp.int32)
-            q = jax.jit(lambda a, b: qgemm(a, b, bits, bits, impl="dot"))
+            q = jax.jit(lambda a, b: qgemm(a, b, bits, bits,
+                                           backend="xla_dot"))
             tq = timeit(q, aq, bq)
             # TPU TC work model: s*t 1-bit passes vs 8x8 dense int8 passes
             work_ratio = (8 * 8) / (bits * bits)

@@ -12,14 +12,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro import api
 from repro.core import bitops
-from repro.kernels import ops as kops
 
 
 def main():
     n, d = 256, 128
     rng = np.random.default_rng(0)
     a = jnp.asarray(np.ones((n, n), np.int32))  # all non-zero (paper setup)
+    pol_reuse = api.ExecutionPolicy(reuse=True)
+    pol_no_reuse = api.ExecutionPolicy(reuse=False)
     for bits in (4, 8, 16):
         xb = min(bits, 8)
         x = jnp.asarray(rng.integers(0, 1 << xb, (n, d)), jnp.int32)
@@ -27,13 +29,12 @@ def main():
         xp = bitops.pack_b(x, xb)
 
         def reuse(ap=ap, xp=xp):          # cross-tile: planes inner loop
-            return kops.bitserial_gemm(ap, xp)
+            return api.bitserial_mm_packed(ap, xp, backend="pallas",
+                                           policy=pol_reuse)
 
-        def no_reuse(ap=ap, xp=xp, xb=xb):  # cross-bit: one pass per plane
-            acc = jnp.zeros((n, d), jnp.int32)
-            for j in range(xb):
-                acc = acc + (kops.bgemm(ap[0], xp[j]) << j)
-            return acc
+        def no_reuse(ap=ap, xp=xp):       # cross-bit: one pass per plane
+            return api.bitserial_mm_packed(ap, xp, backend="pallas",
+                                           policy=pol_no_reuse)
 
         r = np.asarray(reuse())
         nr = np.asarray(no_reuse())

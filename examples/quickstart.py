@@ -2,8 +2,10 @@
 
   1. quantize float tensors to any bitwidth -> BitTensor (3D-stacked packed)
   2. exact any-bitwidth matmul by 1-bit composition (bitMM2Int / bitMM2Bit)
-  3. the Pallas TPU kernel path (validated in interpret mode on CPU)
-  4. zero-tile jumping on a sparse binary adjacency
+  3. backend selection through the repro.api registry: the same call runs
+     on xla_dot (MXU emulation), popcount (bit-serial oracle) or pallas
+     (the TPU kernel, interpret mode on CPU)
+  4. an ExecutionPolicy tuning zero-tile jumping on a sparse adjacency
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,9 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import bitops, bittensor as bt
 from repro.core.zerotile import occupancy_stats, tile_occupancy
-from repro.kernels import ops as kops
 
 rng = np.random.default_rng(0)
 
@@ -35,12 +37,18 @@ print("bitmm2int == integer matmul: exact")
 nxt = bt.bitmm2bit(tx, tw, out_bits=4)
 print(f"bitmm2bit -> {nxt.nbits}-bit BitTensor, shape {nxt.shape}")
 
-# --- 3. the Pallas TPU kernel (interpret mode on CPU) ------------------------
-got = bt.bitmm2int(tx, tw, impl="pallas")
+# --- 3. pick the execution engine through the registry ----------------------
+print(f"registered backends: {api.list_backends()}")
+for name in api.list_backends():          # every backend: identical int32s
+    with api.use(name):
+        got = bt.bitmm2int(tx, tw)
+    assert (np.asarray(got) == np.asarray(ref)).all()
+print("xla_dot == popcount == pallas: exact")
+# per-call override beats the context:
+got = bt.bitmm2int(tx, tw, backend="pallas")
 assert (np.asarray(got) == np.asarray(ref)).all()
-print("Pallas bitserial kernel == oracle: exact")
 
-# --- 4. zero-tile jumping on a sparse adjacency (paper §4.3) -----------------
+# --- 4. an ExecutionPolicy tunes zero-tile jumping (paper §4.3) --------------
 # block-diagonal adjacency: the structure batched METIS subgraphs produce
 adj = np.zeros((256, 256), np.int32)
 for i in range(2):
@@ -49,10 +57,11 @@ for i in range(2):
 feat = rng.integers(0, 2, (256, 64)).astype(np.int32)       # binary features
 ap = bitops.pack_a(jnp.asarray(adj), 1)[0]
 fp = bitops.pack_b(jnp.asarray(feat), 1)[0]
-out = kops.bgemm(ap, fp, jump="compact")                    # skips zero tiles
+skip = api.ExecutionPolicy(jump="compact")                  # skip zero tiles
+out = api.bgemm(ap, fp, backend="pallas", policy=skip)
 assert (np.asarray(out) == adj @ feat).all()
-app = bitops.pad_to(bitops.pad_to(ap, 0, 8), 1, 4)
-st = occupancy_stats(tile_occupancy(app, 8, 4))
+app = bitops.pad_to(bitops.pad_to(ap, 0, skip.block_m), 1, skip.block_w)
+st = occupancy_stats(tile_occupancy(app, skip.block_m, skip.block_w))
 print(f"zero-tile jumping: skipped {st['skip_ratio']:.0%} of "
       f"{st['tiles_total']} TC tiles, result exact")
 print("OK")

@@ -2,18 +2,28 @@
 comparing bf16 weights vs QGTC weight-only quantization (the paper's
 bit compression applied to the memory-bound decode path).
 
+Weight quantization goes through ``repro.api.nn.quantize_lm_params`` — the
+same registry-dispatched pipeline ``repro.launch.serve --wq-bits`` uses —
+and the per-layer matmul primitive is ``repro.api.nn.wq_linear``.
+
 Run:  PYTHONPATH=src python examples/serve_quantized_lm.py
 """
+import contextlib
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import api, configs
+from repro.api import nn as qnn
 from repro.configs.base import smoke_config
-from repro.core.qgemm import weight_quantize, wq_matmul, weight_dequantize
-from repro.dist import sharding as shd
+from repro.core.qgemm import weight_quantize
+
+try:  # dist subsystem is optional; without it serve unsharded
+    from repro.dist import sharding as shd
+except ImportError:
+    shd = None
 from repro.launch.mesh import make_local_mesh
 from repro.launch.serve import DecodeEngine
 from repro.models import lm
@@ -24,33 +34,25 @@ def main():
     cfg = smoke_config(configs.get("codeqwen1.5-7b"))
     cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, d_ff=256)
     mesh = make_local_mesh()
-    rules = shd.make_rules("serve")
-    with mesh, shd.shard_ctx(mesh, rules):
+    shard = (shd.shard_ctx(mesh, shd.make_rules("serve")) if shd is not None
+             else contextlib.nullcontext())
+    with mesh, shard:
         params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg)
 
         # --- QGTC weight-only quantization of every 2-D projection ---------
-        n_bytes_fp = n_bytes_q = 0
-        qparams = {}
-        for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-            key = jax.tree_util.keystr(path)
-            if leaf.ndim >= 2 and "embed" not in key and leaf.size > 4096:
-                w2 = leaf.reshape(-1, leaf.shape[-1]).astype(jnp.float32)
-                wq = weight_quantize(w2, nbits=4)
-                n_bytes_fp += leaf.size * 2
-                n_bytes_q += wq.data.size * 0.5 + wq.scale.size * 4  # 4b packed
-        print(f"# weight-only 4-bit: {n_bytes_fp / 1e6:.1f} MB bf16 -> "
-              f"{n_bytes_q / 1e6:.1f} MB packed "
-              f"({n_bytes_fp / max(n_bytes_q, 1):.1f}x less HBM decode traffic)")
+        params_q, st = qnn.quantize_lm_params(params, nbits=4)
+        print(f"# weight-only 4-bit: {st['n_quantized']} projections, "
+              f"{st['bytes_fp16'] / 1e6:.1f} MB bf16 -> "
+              f"{st['bytes_packed'] / 1e6:.1f} MB packed "
+              f"({st['ratio']:.1f}x less HBM decode traffic)")
 
-        # quantize->dequantize roundtrip into the serving params (W4 effect)
-        def q4(leaf, key):
-            if leaf.ndim == 2 and "embed" not in key and leaf.size > 4096:
-                wq = weight_quantize(leaf.astype(jnp.float32), 4)
-                return weight_dequantize(wq).astype(leaf.dtype)
-            return leaf
-
-        params_q = jax.tree_util.tree_map_with_path(
-            lambda p, l: q4(l, jax.tree_util.keystr(p)), params)
+        # the per-layer primitive dispatches through the backend registry
+        rng = np.random.default_rng(0)
+        xs = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+        wq = weight_quantize(
+            jnp.asarray(rng.normal(size=(128, 64)), jnp.float32), 4)
+        y = qnn.wq_linear(xs, wq, out_dtype=jnp.float32)
+        print(f"# wq_linear through {api.current()[0].name}: {y.shape}")
 
         engine_fp = DecodeEngine(cfg, params, batch_slots=4, max_seq=64)
         engine_q4 = DecodeEngine(cfg, params_q, batch_slots=4, max_seq=64)

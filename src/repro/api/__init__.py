@@ -1,0 +1,116 @@
+"""repro.api — the single dispatch point for every quantized GEMM path.
+
+The paper's contribution is one any-bitwidth TC compute engine behind a
+clean Tensor API (§5). This package is that seam for the reproduction:
+
+  Backend          — protocol an execution engine implements (backend.py)
+  ExecutionPolicy  — frozen dataclass of tunables replacing loose kwargs
+  register/use     — registry + scoped defaults:
+                         with repro.api.use("pallas", policy=pol): ...
+  bitserial_mm, bitserial_mm_packed, bgemm, bitpack, wq_mm,
+  bitserial_fused  — dispatch functions every entry point routes through
+  repro.api.nn     — functional layers (qlinear, qgraph_conv, wq_linear)
+                     shared by the GNN and LM stacks
+
+Per-call override beats context: every dispatch function takes optional
+``backend=`` / ``policy=`` kwargs. The legacy ``impl="dot"|"popcount"|
+"pallas"`` strings are accepted only through the deprecation shims in
+repro.core (``backend_from_impl`` translates them).
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax.numpy as jnp
+
+from repro.api.backend import OPS, Backend, UnsupportedOpError
+from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
+from repro.api.registry import (current, get_backend, list_backends, register,
+                                resolve, set_default, use)
+import repro.api.backends  # noqa: F401  (registers xla_dot/popcount/pallas)
+
+__all__ = [
+    "Backend", "UnsupportedOpError", "OPS",
+    "ExecutionPolicy", "DEFAULT_POLICY",
+    "register", "get_backend", "list_backends", "use", "set_default",
+    "current", "resolve", "backend_from_impl", "shim_backend",
+    "bitserial_mm", "bitserial_mm_packed", "bgemm", "bitpack", "wq_mm",
+    "bitserial_fused", "nn",
+]
+
+_IMPL_ALIASES = {"dot": "xla_dot", "xla_dot": "xla_dot",
+                 "popcount": "popcount", "pallas": "pallas"}
+
+
+def backend_from_impl(impl: str, caller: str) -> str:
+    """Translate a legacy ``impl=`` string to a backend name (deprecated)."""
+    warnings.warn(
+        f"{caller}(impl={impl!r}) is deprecated; use repro.api.use(...) or "
+        f"the backend= keyword instead", DeprecationWarning, stacklevel=3)
+    try:
+        return _IMPL_ALIASES[impl]
+    except KeyError:
+        raise ValueError(f"unknown impl {impl!r} "
+                         f"(expected one of {sorted(_IMPL_ALIASES)})") from None
+
+
+def shim_backend(impl: str | None, backend, caller: str):
+    """The one canonical ``impl=`` deprecation shim for entry points:
+    rejects mixing with ``backend=``, warns, and translates."""
+    if impl is None:
+        return backend
+    if backend is not None:
+        raise ValueError("pass either impl= (deprecated) or backend=, not both")
+    return backend_from_impl(impl, caller)
+
+
+# ------------------------------------------------------------- dispatchers
+
+def bitserial_mm(aq, bq, s: int, t: int, *, backend=None, policy=None):
+    """Exact int32 (M,K)@(K,N) over unpacked unsigned s-bit x t-bit operands."""
+    be, pol = resolve("bitserial_mm", backend=backend, policy=policy, s=s, t=t)
+    return be.bitserial_mm_vals(aq, bq, s, t, policy=pol)
+
+
+def bitserial_mm_packed(a_packed, b_packed, *, backend=None, policy=None):
+    """Exact int32 GEMM over packed (s,M,W) x (t,W,N) bit-plane operands."""
+    s, t = a_packed.shape[0], b_packed.shape[0]
+    be, pol = resolve("bitserial_mm", backend=backend, policy=policy, s=s, t=t)
+    return be.bitserial_mm(a_packed, b_packed, policy=pol)
+
+
+def bgemm(a_packed, b_packed, *, backend=None, policy=None):
+    """1-bit (M,W) x (W,N) packed GEMM -> int32 (zero-tile jump per policy)."""
+    be, pol = resolve("bgemm", backend=backend, policy=policy)
+    return be.bgemm(a_packed, b_packed, policy=pol)
+
+
+def bitpack(x, scale, zero, *, nbits: int, backend=None, policy=None):
+    """Quantize + 3D-stacked pack: (M,K) f32 -> (nbits, M, ceil(K/32))."""
+    be, pol = resolve("bitpack", backend=backend, policy=policy,
+                      s=nbits, t=nbits)
+    return be.bitpack(x, scale, zero, nbits=nbits, policy=pol)
+
+
+def wq_mm(x, wq, *, out_dtype=jnp.bfloat16, backend=None, policy=None):
+    """Weight-only quantized matmul: x (..., K) float @ WeightQ (K, N)."""
+    be, pol = resolve("wq_mm", backend=backend, policy=policy,
+                      s=wq.nbits, t=wq.nbits)
+    return be.wq_mm(x, wq, policy=pol, out_dtype=out_dtype)
+
+
+def bitserial_fused(a_packed, b_packed, alpha, beta, *, out_bits: int,
+                    relu: bool = True, backend=None, policy=None):
+    """Packed GEMM with the fused rescale+requantize epilogue (§4.5)."""
+    s, t = a_packed.shape[0], b_packed.shape[0]
+    be, pol = resolve("bitserial_fused", backend=backend, policy=policy,
+                      s=s, t=t)
+    return be.bitserial_fused(a_packed, b_packed, alpha, beta,
+                              out_bits=out_bits, relu=relu, policy=pol)
+
+
+def __getattr__(name):
+    if name == "nn":  # lazy: nn imports repro.core which must not cycle
+        import repro.api.nn as nn
+        return nn
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,93 @@
+"""Backend protocol for the quantized-GEMM execution engines.
+
+A Backend implements some subset of the capability ops over the paper's
+packed bit-plane layouts (bitops.pack_a / pack_b conventions):
+
+  bitserial_mm    — (s,M,W) x (t,W,N) packed -> exact int32 (M,N)
+  bgemm           — (M,W) x (W,N) 1-bit packed -> int32 (M,N)
+  bitpack         — (M,K) f32 -> quantize + pack -> (nbits, M, ceil(K/32))
+  wq_mm           — float x WeightQ weight-only matmul (LM decode path)
+  bitserial_fused — bitserial_mm with the §4.5 rescale+requantize epilogue
+
+Support is PROBED, not assumed: the registry asks ``supports()`` (bitwidths,
+jump modes, interpret fall-back) before dispatching, and falls back to the
+first capable backend when the active one can't run an op.
+"""
+from __future__ import annotations
+
+import abc
+
+__all__ = ["Backend", "UnsupportedOpError", "OPS"]
+
+OPS = ("bitserial_mm", "bgemm", "bitpack", "wq_mm", "bitserial_fused")
+
+
+class UnsupportedOpError(NotImplementedError):
+    """Raised when a backend is asked for an op it does not provide."""
+
+
+class Backend(abc.ABC):
+    """Base class; concrete backends override the ops they provide.
+
+    Class attributes describe probe-able capability metadata:
+      name               — registry key
+      capabilities       — frozenset of op names from OPS
+      min_bits/max_bits  — supported operand bitwidth range
+      jump_modes         — zero-tile jump modes the backend can exploit
+                           (others are silently ignored: jumping is an
+                           optimization, never a semantic change)
+      interpret_fallback — True if the backend runs off-TPU via Pallas
+                           interpret mode (vs being natively portable)
+    """
+
+    name: str = "abstract"
+    capabilities: frozenset = frozenset()
+    min_bits: int = 1
+    max_bits: int = 8
+    jump_modes: frozenset = frozenset({"none"})
+    interpret_fallback: bool = False
+
+    def supports(self, op: str, *, s: int = 1, t: int = 1) -> bool:
+        """Probe: can this backend run ``op`` on s-bit x t-bit operands?"""
+        if op not in self.capabilities:
+            return False
+        lo, hi = self.min_bits, self.max_bits
+        return lo <= s <= hi and lo <= t <= hi
+
+    # ---------------------------------------------------------------- ops
+    # Packed-operand canonical forms. ``policy`` is always an
+    # ExecutionPolicy; backends read only the fields they understand.
+
+    def bitserial_mm(self, a_packed, b_packed, *, policy):
+        """(s,M,W) x (t,W,N) uint32 -> exact int32 (M,N)."""
+        raise UnsupportedOpError(f"{self.name} does not provide bitserial_mm")
+
+    def bitserial_mm_vals(self, aq, bq, s: int, t: int, *, policy):
+        """Unpacked int32 operands (M,K) x (K,N); default packs then runs
+        the packed path. Backends with a faster direct route override."""
+        from repro.core import bitops
+
+        out = self.bitserial_mm(
+            bitops.pack_a(aq, s), bitops.pack_b(bq, t), policy=policy)
+        return out[: aq.shape[0], : bq.shape[1]]
+
+    def bgemm(self, a_packed, b_packed, *, policy):
+        """(M,W) x (W,N) uint32 1-bit GEMM -> int32 (M,N)."""
+        raise UnsupportedOpError(f"{self.name} does not provide bgemm")
+
+    def bitpack(self, x, scale, zero, *, nbits: int, policy):
+        """Quantize (Eq. 2) + 3D-stacked pack -> (nbits, M, ceil(K/32))."""
+        raise UnsupportedOpError(f"{self.name} does not provide bitpack")
+
+    def wq_mm(self, x, wq, *, policy, out_dtype):
+        """x (..., K) float @ WeightQ (K, N) with affine epilogue."""
+        raise UnsupportedOpError(f"{self.name} does not provide wq_mm")
+
+    def bitserial_fused(self, a_packed, b_packed, alpha, beta, *,
+                        out_bits: int, relu: bool, policy):
+        """bitserial_mm + fused alpha*acc+beta -> (relu) -> requantize."""
+        raise UnsupportedOpError(f"{self.name} does not provide bitserial_fused")
+
+    def __repr__(self):
+        caps = ",".join(sorted(self.capabilities))
+        return f"<Backend {self.name} [{caps}] bits={self.min_bits}..{self.max_bits}>"

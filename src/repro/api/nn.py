@@ -1,0 +1,98 @@
+"""Functional quantized layers shared by the GNN and LM stacks.
+
+One implementation of the quantize -> pack -> integer-MM -> rescale
+pipeline, so models/gnn.py, serve/engine.py and the LM serving path stop
+duplicating it. Everything dispatches through the repro.api registry, so
+``with repro.api.use("pallas"): ...`` switches the whole model.
+
+  qlinear       — s-bit activations x t-bit weights -> float (affine
+                  epilogue recovers x @ w), optional bias/relu
+  qgraph_conv   — Â h aggregation via 1-bit adjacency x s-bit features
+                  integer GEMM + dequant epilogue (Algorithm 1)
+  wq_linear     — weight-only quantized projection (LM decode path)
+  quantize_lm_params — walk an LM param pytree, weight-quantize every
+                  large 2-D projection, report HBM savings
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.quantize import QuantParams, affine_matmul_correction
+
+__all__ = ["qlinear", "qgraph_conv", "wq_linear", "quantize_lm_params"]
+
+
+def qlinear(xq, qpx: QuantParams, wq, qpw: QuantParams, *, bias=None,
+            relu: bool = False, backend=None, policy=None):
+    """Integer GEMM of quantized activations x weights -> float x @ w.
+
+    xq (M, K) unsigned qpx.nbits ints; wq (K, N) unsigned qpw.nbits ints.
+    The exact int32 product is corrected by the rank-1 affine epilogue
+    (quantize.affine_matmul_correction), then bias/relu are applied.
+    """
+    prod = api.bitserial_mm(xq, wq, qpx.nbits, qpw.nbits,
+                            backend=backend, policy=policy)
+    out = affine_matmul_correction(xq, wq, qpx, qpw, prod)
+    if bias is not None:
+        out = out + bias
+    if relu:
+        out = jax.nn.relu(out)
+    return out
+
+
+def qgraph_conv(adj_bin, hq, qph: QuantParams, inv_deg, *, backend=None,
+                policy=None):
+    """Â h with Â = (D+I)^-1 (A+I) over quantized features (Algorithm 1).
+
+    adj_bin (N, N) 0/1 int32 (no self loops); hq (N, D) unsigned
+    qph.nbits ints; inv_deg (N, 1). The 1-bit x s-bit integer GEMM computes
+    exact neighbor sums of hq; the epilogue dequantizes, adds self, scales.
+    """
+    cnt = api.bitserial_mm(adj_bin, hq, 1, qph.nbits,
+                           backend=backend, policy=policy)
+    deg = jnp.sum(adj_bin, axis=1, keepdims=True).astype(jnp.float32)
+    # dequant: sum_j h_j = scale * sum_j hq_j + deg * zero
+    hf = hq.astype(jnp.float32) * qph.scale + qph.zero
+    agg = cnt.astype(jnp.float32) * qph.scale + deg * qph.zero
+    return (agg + hf) * inv_deg
+
+
+def wq_linear(x, wq, *, bias=None, out_dtype=jnp.bfloat16, backend=None,
+              policy=None):
+    """x (..., K) float @ weight-only-quantized W (K, N) + optional bias."""
+    out = api.wq_mm(x, wq, out_dtype=out_dtype, backend=backend,
+                    policy=policy)
+    if bias is not None:
+        out = (out + bias).astype(out_dtype)
+    return out
+
+
+def quantize_lm_params(params, nbits: int = 4, min_size: int = 4096,
+                       skip: tuple = ("embed",)):
+    """Weight-only-quantize every large 2-D projection in an LM pytree.
+
+    Returns ``(params_q, stats)`` where params_q has each eligible leaf
+    replaced by its quantize->dequantize roundtrip (the W-nbits serving
+    effect on a stock forward pass) and stats reports the packed HBM
+    footprint: {"n_quantized", "bytes_fp16", "bytes_packed", "ratio"}.
+    """
+    from repro.core.qgemm import weight_dequantize, weight_quantize
+
+    stats = {"n_quantized": 0, "bytes_fp16": 0, "bytes_packed": 0}
+
+    def visit(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if (leaf.ndim != 2 or leaf.size <= min_size
+                or any(s in key for s in skip)):
+            return leaf
+        wq = weight_quantize(leaf.astype(jnp.float32), nbits)
+        stats["n_quantized"] += 1
+        stats["bytes_fp16"] += leaf.size * 2
+        stats["bytes_packed"] += leaf.size * nbits // 8 + wq.scale.size * 4
+        return weight_dequantize(wq).astype(leaf.dtype)
+
+    params_q = jax.tree_util.tree_map_with_path(visit, params)
+    stats["ratio"] = stats["bytes_fp16"] / max(stats["bytes_packed"], 1)
+    return params_q, stats

@@ -1,0 +1,57 @@
+"""ExecutionPolicy: every tunable of quantized-GEMM execution in one object.
+
+Before this layer existed, tile sizes (``block_m/block_n/block_w``), the
+zero-tile ``jump`` mode, compute ``mode`` and interpret fall-back were loose
+kwargs re-plumbed at every call site. An ExecutionPolicy is a frozen,
+hashable dataclass, so it can ride through ``jax.jit`` as a static argument
+and be compared/deduped by value.
+
+Fields map onto the paper's knobs:
+  block_m/block_n/block_w — TC tile shape (paper's 8x128 tiles over packed
+                            words; block_w counts uint32 words of K)
+  mode                    — kernel compute unit: 'vpu' (popcount) | 'mxu'
+  jump                    — zero-tile jumping (§4.3): none | mask | compact
+  reuse                   — non-zero tile reuse (§4.4): keep the s*t plane
+                            loop inside one kernel so A-tile loads are O(1)
+  fused_requantize        — fuse the §4.5 rescale+requantize epilogue into
+                            the GEMM when the backend supports it
+  interpret               — Pallas interpret-mode override; None = auto
+                            (interpret everywhere except real TPU)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ExecutionPolicy", "DEFAULT_POLICY", "JUMP_MODES", "COMPUTE_MODES"]
+
+JUMP_MODES = ("none", "mask", "compact")
+COMPUTE_MODES = ("vpu", "mxu")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    block_m: int = 8
+    block_n: int = 128
+    block_w: int = 4
+    mode: str = "vpu"
+    jump: str = "none"
+    reuse: bool = True
+    fused_requantize: bool = False
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.jump not in JUMP_MODES:
+            raise ValueError(f"jump must be one of {JUMP_MODES}, got {self.jump!r}")
+        if self.mode not in COMPUTE_MODES:
+            raise ValueError(f"mode must be one of {COMPUTE_MODES}, got {self.mode!r}")
+        for f in ("block_m", "block_n", "block_w"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v <= 0:
+                raise ValueError(f"{f} must be a positive int, got {v!r}")
+
+    def replace(self, **kw) -> "ExecutionPolicy":
+        """Functional update (alias for dataclasses.replace)."""
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_POLICY = ExecutionPolicy()

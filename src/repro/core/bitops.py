@@ -29,6 +29,7 @@ __all__ = [
     "pack_b",
     "popcount_matmul_packed",
     "bitserial_matmul",
+    "bitserial_matmul_planes",
     "bitserial_matmul_packed",
 ]
 
@@ -125,23 +126,12 @@ def bitserial_matmul_packed(a_packed: jax.Array, b_packed: jax.Array) -> jax.Arr
     return acc
 
 
-def bitserial_matmul(
-    aq: jax.Array,
-    bq: jax.Array,
-    s: int,
-    t: int,
-    impl: str = "dot",
-) -> jax.Array:
-    """Exact int32 matmul of unsigned s-bit x t-bit operands by 1-bit composition.
+def bitserial_matmul_planes(aq: jax.Array, bq: jax.Array, s: int, t: int) -> jax.Array:
+    """Exact int32 matmul of unsigned s-bit x t-bit operands by per-plane dots.
 
-    impl='dot'      : per-plane int8 dot products (XLA/MXU-friendly emulation)
-    impl='popcount' : packed AND+popcount (the VPU bit-serial semantics)
-    Both return exactly aq @ bq (int32).
+    One int8 dot product per (i, j) bit-plane pair, shifted and summed
+    (Eq. 5/6) — the XLA/MXU-friendly emulation of the TC bit-serial GEMM.
     """
-    if impl == "popcount":
-        return bitserial_matmul_packed(pack_a(aq, s), pack_b(bq, t))
-    if impl != "dot":
-        raise ValueError(f"unknown impl {impl!r}")
     a_planes = bit_decompose(aq, s).astype(jnp.int8)  # (s, M, K)
     b_planes = bit_decompose(bq, t).astype(jnp.int8)  # (t, K, N)
     m, n = aq.shape[0], bq.shape[1]
@@ -156,6 +146,35 @@ def bitserial_matmul(
             )
             acc = acc + (prod << (i + j))
     return acc
+
+
+def bitserial_matmul(
+    aq: jax.Array,
+    bq: jax.Array,
+    s: int,
+    t: int,
+    impl: str = "dot",
+) -> jax.Array:
+    """Deprecated ``impl=`` shim; use ``repro.api.bitserial_mm`` instead.
+
+    Translates the legacy impl strings onto the concrete implementations
+    (``bitserial_matmul_planes`` / ``bitserial_matmul_packed``). Both return
+    exactly aq @ bq (int32).
+    """
+    import warnings
+
+    warnings.warn(
+        "bitops.bitserial_matmul(impl=...) is deprecated; use "
+        "repro.api.bitserial_mm (registry dispatch) or call "
+        "bitserial_matmul_planes / bitserial_matmul_packed directly",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if impl == "popcount":
+        return bitserial_matmul_packed(pack_a(aq, s), pack_b(bq, t))
+    if impl != "dot":
+        raise ValueError(f"unknown impl {impl!r}")
+    return bitserial_matmul_planes(aq, bq, s, t)
 
 
 def packing_ratio(nbits: int, dtype_bits: int = 32) -> float:

@@ -10,10 +10,15 @@ APIs mirror the paper:
   to_float(bt)             ~  decode + dequantize
   bitmm2int(a, b)          ~  bitMM2Int(C, A, B, bit_A, bit_B)
   bitmm2bit(a, b, out_bits)~  bitMM2Bit(..., bit_C)  (requantized output)
+
+The matmuls dispatch through the repro.api backend registry; select the
+engine with ``with repro.api.use("pallas", policy=...)`` or per call via
+``backend=`` / ``policy=``. The ``impl=`` kwarg is a deprecation shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -54,15 +59,11 @@ class BitTensor:
 
     @property
     def nbytes(self) -> int:
-        import numpy as np
-
-        return int(np.prod(self.data.shape)) * 4
+        return math.prod(self.data.shape) * 4
 
     @property
     def logical_nbytes_fp32(self) -> int:
-        import numpy as np
-
-        return int(np.prod(self.shape)) * 4
+        return math.prod(self.shape) * 4
 
 
 def to_bit(
@@ -112,19 +113,15 @@ def _check_mm(a: BitTensor, b: BitTensor):
         )
 
 
-def bitmm2int(a: BitTensor, b: BitTensor, impl: str = "popcount") -> jax.Array:
+def bitmm2int(a: BitTensor, b: BitTensor, impl: str | None = None, *,
+              backend=None, policy=None) -> jax.Array:
     """Any-bitwidth MM with exact int32 output (paper bitMM2Int)."""
-    _check_mm(a, b)
-    if impl == "popcount":
-        out = bitops.bitserial_matmul_packed(a.data, b.data)
-    elif impl == "dot":
-        out = bitops.bitserial_matmul(to_val(a), to_val(b), a.nbits, b.nbits, impl="dot")
-    elif impl == "pallas":
-        from repro.kernels import ops as kops
+    from repro import api
 
-        out = kops.bitserial_gemm(a.data, b.data)
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
+    _check_mm(a, b)
+    backend = api.shim_backend(impl, backend, "bitmm2int")
+    out = api.bitserial_mm_packed(a.data, b.data, backend=backend,
+                                  policy=policy)
     return out[: a.shape[0], : b.shape[1]]
 
 
@@ -133,7 +130,10 @@ def bitmm2bit(
     b: BitTensor,
     out_bits: int,
     out_qp: QuantParams | None = None,
-    impl: str = "popcount",
+    impl: str | None = None,
+    *,
+    backend=None,
+    policy=None,
 ) -> BitTensor:
     """Any-bitwidth MM with requantized low-bit output (paper bitMM2Bit).
 
@@ -141,8 +141,28 @@ def bitmm2bit(
     calibration when ``out_qp`` is None) and re-packed along the last axis,
     ready to serve as the next layer's A operand — this is the §4.5
     inter-layer fusion contract.
+
+    With ``policy.fused_requantize`` and a precomputed scalar ``out_qp``,
+    the requantize runs inside the GEMM epilogue (backend permitting) and
+    the fp32 accumulator never round-trips through HBM; the fused floor can
+    differ from the unfused path by at most one quantization level (the
+    epilogue multiplies by 1/scale instead of dividing by scale).
     """
-    acc = bitmm2int(a, b, impl=impl)
+    from repro import api
+
+    _check_mm(a, b)
+    backend = api.shim_backend(impl, backend, "bitmm2bit")
+    pol = policy if policy is not None else api.current()[1]
+    if pol.fused_requantize and out_qp is not None and out_qp.scale.ndim == 0:
+        m, n = a.shape[0], b.shape[1]
+        alpha = jnp.broadcast_to(1.0 / out_qp.scale, (m, 1))
+        beta = jnp.broadcast_to(-out_qp.zero / out_qp.scale, (1, n))
+        q = api.bitserial_fused(a.data, b.data, alpha, beta,
+                                out_bits=out_bits, relu=False,
+                                backend=backend, policy=pol)
+        q = q[:m, :n]
+        return to_bit(q, out_bits, qp=out_qp, pack_axis=-1, prequantized=True)
+    acc = bitmm2int(a, b, backend=backend, policy=policy)
     accf = acc.astype(jnp.float32)
     if out_qp is None:
         out_qp = calibrate(accf, out_bits)

@@ -1,15 +1,16 @@
-"""Quantized GEMM dispatch + weight-quantization utilities for serving.
+"""Quantized GEMM entry points + weight-quantization utilities for serving.
 
-Three execution paths for the paper's any-bitwidth GEMM:
-  'dot'      — per-bit-plane int8 XLA dots (MXU emulation; fast on any backend)
-  'popcount' — packed AND+popcount in pure jnp (bit-serial semantics, oracle)
-  'pallas'   — the TPU Pallas kernel (kernels/bitserial.py), validated in
-               interpret mode on CPU
+``qgemm`` and ``wq_matmul`` are thin fronts over the repro.api backend
+registry: the execution engine (xla_dot / popcount / pallas) and its tuning
+(tile sizes, zero-tile jumping, interpret fall-back) come from the active
+``repro.api.use(...)`` context, an explicit ``backend=``/``policy=``
+override, or the registered defaults. The legacy ``impl=`` kwarg is kept as
+a deprecation shim that warns and translates.
 
-plus weight-only quantization (`WeightQ`) used by the LM serving stack: the
-QGTC bit-packing applied to static weights with per-channel scales. This is
-the "beyond the paper's GNNs" integration: the same 3D-stacked compression
-shrinks HBM traffic for memory-bound decode.
+Weight-only quantization (`WeightQ`) is the QGTC bit-packing applied to
+static weights with per-channel scales — the "beyond the paper's GNNs"
+integration: the same 3D-stacked compression shrinks HBM traffic for
+memory-bound LM decode.
 """
 from __future__ import annotations
 
@@ -24,17 +25,17 @@ from repro.core.quantize import QuantParams, calibrate, quantize
 __all__ = ["qgemm", "WeightQ", "weight_quantize", "weight_dequantize", "wq_matmul"]
 
 
-def qgemm(aq: jax.Array, bq: jax.Array, s: int, t: int, impl: str = "dot") -> jax.Array:
-    """Exact int32 (M,K)@(K,N) over unsigned s-bit x t-bit quantized operands."""
-    if impl in ("dot", "popcount"):
-        return bitops.bitserial_matmul(aq, bq, s, t, impl=impl)
-    if impl == "pallas":
-        from repro.kernels import ops as kops
+def qgemm(aq: jax.Array, bq: jax.Array, s: int, t: int,
+          impl: str | None = None, *, backend=None, policy=None) -> jax.Array:
+    """Exact int32 (M,K)@(K,N) over unsigned s-bit x t-bit quantized operands.
 
-        m, n = aq.shape[0], bq.shape[1]
-        out = kops.bitserial_gemm(bitops.pack_a(aq, s), bitops.pack_b(bq, t))
-        return out[:m, :n]
-    raise ValueError(f"unknown impl {impl!r}")
+    Dispatches through the repro.api registry. ``impl=`` is deprecated;
+    pass ``backend=`` / ``policy=`` or use ``with repro.api.use(...)``.
+    """
+    from repro import api
+
+    backend = api.shim_backend(impl, backend, "qgemm")
+    return api.bitserial_mm(aq, bq, s, t, backend=backend, policy=policy)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -85,14 +86,16 @@ def weight_dequantize(wq: WeightQ) -> jax.Array:
     return wq.data.astype(jnp.float32) * wq.scale + wq.zero
 
 
-def wq_matmul(x: jax.Array, wq: WeightQ, out_dtype=jnp.bfloat16) -> jax.Array:
+def wq_matmul(x: jax.Array, wq: WeightQ, out_dtype=jnp.bfloat16, *,
+              backend=None, policy=None) -> jax.Array:
     """x (…, K) fp @ quantized W (K, N) with affine correction.
 
-    y = (x @ q) * scale + rowsum(x) * zero  — the int matmul runs with int8
+    y = (x @ q) * scale + rowsum(x) * zero — the int matmul runs with int8
     storage; scale/zero fold as rank-1 epilogues so full-precision weights
-    are never materialized in HBM.
+    are never materialized in HBM. Routed through the repro.api registry
+    (backends lacking ``wq_mm`` fall back to the first capable one).
     """
-    xf = x.astype(jnp.float32)
-    core = jnp.einsum("...k,kn->...n", xf, wq.data.astype(jnp.float32))
-    rowsum = jnp.sum(xf, axis=-1, keepdims=True)
-    return (core * wq.scale + rowsum * wq.zero).astype(out_dtype)
+    from repro import api
+
+    return api.wq_mm(x, wq, out_dtype=out_dtype, backend=backend,
+                     policy=policy)

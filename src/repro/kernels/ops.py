@@ -4,6 +4,12 @@ plumbing, output cropping, and CPU-interpret dispatch.
 On CPU backends the kernels execute under interpret=True (Python semantics,
 exact); on TPU they compile to Mosaic. All wrappers are shape-polymorphic
 over inputs but keep block sizes static.
+
+Tunables come from an ``repro.api.ExecutionPolicy`` (``policy=``); explicit
+keyword overrides (``block_m=``, ``jump=``, ...) win over the policy, which
+wins over DEFAULT_POLICY. The public wrappers resolve the policy eagerly and
+call inner jitted functions with static ints, so two calls with equal
+policies share one compiled executable.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
 from repro.core import bitops, zerotile
 from repro.kernels import bgemm as _bgemm
 from repro.kernels import bitpack as _bitpack
@@ -26,6 +33,16 @@ def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve(policy: ExecutionPolicy | None, **overrides):
+    """Merge explicit kwargs over the policy over DEFAULT_POLICY."""
+    pol = policy if policy is not None else DEFAULT_POLICY
+    out = {k: (v if v is not None else getattr(pol, k))
+           for k, v in overrides.items()}
+    if "interpret" in out and out["interpret"] is None:
+        out["interpret"] = auto_interpret()
+    return out
+
+
 def _pad2(x, bm, bw, axes=(0, 1)):
     x = bitops.pad_to(x, axes[0], bm)
     return bitops.pad_to(x, axes[1], bw)
@@ -33,20 +50,8 @@ def _pad2(x, bm, bw, axes=(0, 1)):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
                                              "mode", "jump", "interpret"))
-def bgemm(
-    a_packed: jax.Array,
-    b_packed: jax.Array,
-    *,
-    block_m: int = 8,
-    block_n: int = 128,
-    block_w: int = 4,
-    mode: str = "vpu",
-    jump: str = "none",  # none | mask | compact
-    interpret: bool | None = None,
-) -> jax.Array:
-    """1-bit GEMM (M,W)x(W,N)->int32 with optional zero-tile jumping."""
-    if interpret is None:
-        interpret = auto_interpret()
+def _bgemm_call(a_packed, b_packed, *, block_m, block_n, block_w, mode,
+                jump, interpret):
     m, _ = a_packed.shape
     _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w)
@@ -65,33 +70,73 @@ def bgemm(
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
-                                             "mode", "interpret"))
-def bitserial_gemm(
+def bgemm(
     a_packed: jax.Array,
     b_packed: jax.Array,
     *,
-    block_m: int = 8,
-    block_n: int = 128,
-    block_w: int = 4,
-    mode: str = "vpu",
+    policy: ExecutionPolicy | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_w: int | None = None,
+    mode: str | None = None,
+    jump: str | None = None,  # none | mask | compact
     interpret: bool | None = None,
 ) -> jax.Array:
-    """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM."""
-    if interpret is None:
-        interpret = auto_interpret()
+    """1-bit GEMM (M,W)x(W,N)->int32 with optional zero-tile jumping."""
+    kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
+                  mode=mode, jump=jump, interpret=interpret)
+    return _bgemm_call(a_packed, b_packed, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
+                                             "mode", "interpret"))
+def _bitserial_gemm_call(a_packed, b_packed, *, block_m, block_n, block_w,
+                         mode, interpret):
     _, m, _ = a_packed.shape
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
     out = _bitserial.bitserial_gemm(a, b, block_m=block_m, block_n=block_n,
-                                    block_w=block_w, mode=mode, interpret=interpret)
+                                    block_w=block_w, mode=mode,
+                                    interpret=interpret)
     return out[:m, :n]
+
+
+def bitserial_gemm(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    policy: ExecutionPolicy | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_w: int | None = None,
+    mode: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM."""
+    kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
+                  mode=mode, interpret=interpret)
+    return _bitserial_gemm_call(a_packed, b_packed, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("out_bits", "relu", "block_m",
                                              "block_n", "block_w", "mode",
                                              "interpret"))
+def _bitserial_fused_call(a_packed, b_packed, alpha, beta, *, out_bits, relu,
+                          block_m, block_n, block_w, mode, interpret):
+    _, m, _ = a_packed.shape
+    _, _, n = b_packed.shape
+    a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
+    b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
+    al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
+    be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
+    out = _bitserial.bitserial_fused(a, b, al, be, out_bits=out_bits,
+                                     relu=relu, block_m=block_m,
+                                     block_n=block_n, block_w=block_w,
+                                     mode=mode, interpret=interpret)
+    return out[:m, :n]
+
+
 def bitserial_fused(
     a_packed: jax.Array,
     b_packed: jax.Array,
@@ -100,47 +145,23 @@ def bitserial_fused(
     *,
     out_bits: int,
     relu: bool = True,
-    block_m: int = 8,
-    block_n: int = 128,
-    block_w: int = 4,
-    mode: str = "vpu",
+    policy: ExecutionPolicy | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_w: int | None = None,
+    mode: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5)."""
-    if interpret is None:
-        interpret = auto_interpret()
-    _, m, _ = a_packed.shape
-    _, _, n = b_packed.shape
-    a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
-    b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
-    al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
-    be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
-    out = _bitserial.bitserial_fused(a, b, al, be, out_bits=out_bits, relu=relu,
-                                     block_m=block_m, block_n=block_n,
-                                     block_w=block_w, mode=mode,
-                                     interpret=interpret)
-    return out[:m, :n]
+    kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
+                  mode=mode, interpret=interpret)
+    return _bitserial_fused_call(a_packed, b_packed, alpha, beta,
+                                 out_bits=out_bits, relu=relu, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_w",
                                              "interpret"))
-def bitpack(
-    x: jax.Array,
-    scale: jax.Array,
-    zero: jax.Array,
-    *,
-    nbits: int,
-    block_m: int = 8,
-    block_w: int = 4,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """Quantize + pack (M,K) f32 -> (nbits, M_pad, ceil(K/32)) uint32.
-
-    Output keeps the padded M (callers crop); the word axis reflects K
-    padded to the block boundary (zero words — harmless for GEMM).
-    """
-    if interpret is None:
-        interpret = auto_interpret()
+def _bitpack_call(x, scale, zero, *, nbits, block_m, block_w, interpret):
     m, k = x.shape
     xp = _pad2(x, block_m, block_w * 32)
     out = _bitpack.bitpack(xp, scale, zero, nbits, k_true=k, block_m=block_m,
@@ -148,29 +169,60 @@ def bitpack(
     return out[:, :m, :]
 
 
-@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
-                                             "block_k", "interpret"))
-def wq_gemm(
+def bitpack(
     x: jax.Array,
-    w_packed: jax.Array,
-    scales: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
     *,
-    group: int = 32,
-    block_m: int = 8,
-    block_n: int = 256,
-    block_k: int = 128,
+    nbits: int,
+    policy: ExecutionPolicy | None = None,
+    block_m: int | None = None,
+    block_w: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """x (M,K) @ 4-bit packed W (K,N) -> f32 (M,N), dequant inside VMEM."""
-    if interpret is None:
-        interpret = auto_interpret()
+    """Quantize + pack (M,K) f32 -> (nbits, M_pad, ceil(K/32)) uint32.
+
+    Output keeps the padded M (callers crop); the word axis reflects K
+    padded to the block boundary (zero words — harmless for GEMM).
+    """
+    kw = _resolve(policy, block_m=block_m, block_w=block_w,
+                  interpret=interpret)
+    return _bitpack_call(x, scale, zero, nbits=nbits, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def _wq_gemm_call(x, w_packed, scales, *, group, block_m, block_n, block_k,
+                  interpret):
     m, k = x.shape
     n = w_packed.shape[1] * 2
     xp = _pad2(x, block_m, block_k)
-    kp = xp.shape[1]
     wp = bitops.pad_to(bitops.pad_to(w_packed, 0, block_k), 1, block_n // 2)
     sp = bitops.pad_to(bitops.pad_to(scales, 0, block_k // group), 1, block_n)
     out = _wqmm.wq_gemm(xp, wp, sp, group=group, block_m=block_m,
                         block_n=block_n, block_k=block_k,
                         interpret=interpret)
     return out[:m, :n]
+
+
+def wq_gemm(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scales: jax.Array,
+    *,
+    group: int = 32,
+    policy: ExecutionPolicy | None = None,
+    block_m: int = 8,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x (M,K) @ 4-bit packed W (K,N) -> f32 (M,N), dequant inside VMEM.
+
+    Tile sizes keep their own defaults (the packed-nibble layout wants a
+    wider N block than the bit-serial kernels); only ``interpret`` is read
+    from the policy.
+    """
+    kw = _resolve(policy, interpret=interpret)
+    return _wq_gemm_call(x, w_packed, scales, group=group, block_m=block_m,
+                         block_n=block_n, block_k=block_k, **kw)

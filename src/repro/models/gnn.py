@@ -10,6 +10,14 @@ Each model has three execution paths sharing one parameter pytree:
                rescale epilogues (Algorithm 1 + §4.5). Hidden layers
                requantize; only the final layer emits full precision.
 
+The qgtc path is built from the functional layers in ``repro.api.nn``
+(``qlinear`` / ``qgraph_conv``), which dispatch through the repro.api
+backend registry: pick the execution engine with
+``with repro.api.use("pallas", policy=...)`` or pass ``backend=``/
+``policy=`` to ``forward_qgtc``. (GNNConfig used to carry an ``impl``
+string; execution strategy now lives in the api layer, not the model
+config.)
+
 QAT (fake-quant, STE) runs on the fp32 graph; the integer path consumes the
 same weights post-quantization, and tests assert the two agree within
 accumulated rounding.
@@ -26,8 +34,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitops
-from repro.core.qgemm import qgemm
+from repro.api import nn as qnn
 from repro.core.quantize import QuantParams, calibrate, fake_quant, quantize
 
 __all__ = ["GNNConfig", "init_params", "forward", "forward_qgtc", "quantize_params"]
@@ -43,7 +50,6 @@ class GNNConfig:
     x_bits: int = 8  # activation bits (paper's s)
     w_bits: int = 8  # weight bits (paper's t)
     gin_eps: float = 0.0
-    impl: str = "dot"  # integer GEMM impl: dot | popcount | pallas
 
     @staticmethod
     def paper_gcn(in_dim: int, n_classes: int, x_bits=8, w_bits=8) -> "GNNConfig":
@@ -150,30 +156,6 @@ def quantize_params(params: dict, cfg: GNNConfig) -> dict:
     return out
 
 
-def _qgemm_affine(xq, wq_pair, qpx: QuantParams, cfg: GNNConfig) -> jax.Array:
-    """Integer GEMM + affine correction -> float result of x @ w."""
-    wq, qpw = wq_pair
-    prod = qgemm(xq, wq, qpx.nbits, qpw.nbits, impl=cfg.impl)
-    rowsum = jnp.sum(xq, axis=-1, keepdims=True).astype(jnp.float32)
-    colsum = jnp.sum(wq, axis=-2, keepdims=True).astype(jnp.float32)
-    k = xq.shape[-1]
-    return (qpx.scale * qpw.scale * prod.astype(jnp.float32)
-            + qpx.scale * qpw.zero * rowsum
-            + qpw.scale * qpx.zero * colsum
-            + k * qpx.zero * qpw.zero)
-
-
-def _agg_binary(adj_bin: jax.Array, hq: jax.Array, qph: QuantParams,
-                inv_deg: jax.Array, cfg: GNNConfig) -> jax.Array:
-    """Â h via 1-bit x s-bit integer GEMM + dequant epilogue (Algorithm 1)."""
-    cnt = qgemm(adj_bin, hq, 1, qph.nbits, impl=cfg.impl)  # exact sums of hq
-    deg = jnp.sum(adj_bin, axis=1, keepdims=True).astype(jnp.float32)
-    # dequant: sum(h) = scale * sum(hq) + deg * zero ; then + self, * inv_deg
-    hf = hq.astype(jnp.float32) * qph.scale + qph.zero
-    agg = cnt.astype(jnp.float32) * qph.scale + deg * qph.zero
-    return (agg + hf) * inv_deg
-
-
 def _requant(h: jax.Array, bits: int):
     qp = calibrate(h, bits)
     return quantize(h, qp), qp
@@ -185,24 +167,35 @@ def forward_qgtc(
     x: jax.Array,
     inv_deg: jax.Array,
     cfg: GNNConfig,
+    *,
+    backend=None,
+    policy=None,
 ) -> jax.Array:
-    """Integer-domain forward (serving path). adj_bin: (N,N) 0/1 int32."""
+    """Integer-domain forward (serving path). adj_bin: (N,N) 0/1 int32.
+
+    ``backend``/``policy`` override the active repro.api context for every
+    integer GEMM in the stack.
+    """
+    mm = dict(backend=backend, policy=policy)
     hq, qph = _requant(x, cfg.x_bits)
     for l in range(cfg.layers):
         p = qparams[f"layer{l}"]
         last = l == cfg.layers - 1
         if cfg.model == "gin":
-            a = _agg_binary(adj_bin, hq, qph, inv_deg, cfg)
+            a = qnn.qgraph_conv(adj_bin, hq, qph, inv_deg, **mm)
             hf = hq.astype(jnp.float32) * qph.scale + qph.zero
             a = a + p["eps"] * hf
             aq, qpa = _requant(a, cfg.x_bits)
-            u = jax.nn.relu(_qgemm_affine(aq, p["w1"], qpa, cfg) + p["b1"])
+            w1, qpw1 = p["w1"]
+            u = qnn.qlinear(aq, qpa, w1, qpw1, bias=p["b1"], relu=True, **mm)
             uq, qpu = _requant(u, cfg.x_bits)
-            h = _qgemm_affine(uq, p["w2"], qpu, cfg) + p["b2"]
+            w2, qpw2 = p["w2"]
+            h = qnn.qlinear(uq, qpu, w2, qpw2, bias=p["b2"], **mm)
         else:
-            u = _qgemm_affine(hq, p["w"], qph, cfg) + p["b"]
+            w, qpw = p["w"]
+            u = qnn.qlinear(hq, qph, w, qpw, bias=p["b"], **mm)
             uq, qpu = _requant(u, cfg.x_bits)
-            h = _agg_binary(adj_bin, uq, qpu, inv_deg, cfg)
+            h = qnn.qgraph_conv(adj_bin, uq, qpu, inv_deg, **mm)
         if not last:
             h = jax.nn.relu(h)
             hq, qph = _requant(h, cfg.x_bits)  # §4.5: requantize between layers

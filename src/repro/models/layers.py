@@ -4,7 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import constrain
+try:  # dist subsystem is optional; without it run unsharded
+    from repro.dist.sharding import constrain
+except ImportError:
+    def constrain(x, *specs):
+        return x
 
 __all__ = ["rms_norm", "layer_norm", "rope", "apply_rope", "dense",
            "cross_entropy", "Initializer"]

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import constrain
+from repro.models.layers import constrain  # gated identity fallback lives there
 from repro.models.layers import Initializer, apply_rope, dense, rope
 
 __all__ = ["init_attention", "attention", "init_mlp", "mlp", "init_moe", "moe",
@@ -468,7 +468,11 @@ def moe(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         all-reduces their gradients).
       - pure jnp fallback for single-device tests/examples.
     """
-    from repro.dist.sharding import current_ctx
+    try:
+        from repro.dist.sharding import current_ctx
+    except ImportError:
+        def current_ctx():
+            return None
 
     b, t, d = x.shape
     e, k = cfg.moe_experts, cfg.moe_top_k

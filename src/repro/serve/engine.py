@@ -2,7 +2,9 @@
 
 GNNServer — the paper's deployment shape: stream subgraph batches through
 the quantized integer forward path with bandwidth-optimized packed
-transfers (§4.6) and zero-tile accounting (§6.4).
+transfers (§4.6) and zero-tile accounting (§6.4). The execution engine and
+its tuning are a constructor choice (``backend=``/``policy=`` routed
+through the repro.api registry), not baked into the model.
 
 The LM decode engine lives in repro.launch.serve (it needs mesh context);
 this module stays host-side and single-device friendly.
@@ -16,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import bitops
 from repro.core.zerotile import occupancy_stats, tile_occupancy
 from repro.graph.batching import SubgraphBatch
@@ -42,14 +45,21 @@ class ServeStats:
 
 
 class GNNServer:
-    """Quantized batched-subgraph inference (the paper's serving loop)."""
+    """Quantized batched-subgraph inference (the paper's serving loop).
+
+    ``backend``/``policy`` select the execution engine through the
+    repro.api registry (None = the active ``repro.api.use`` context /
+    registered default). The policy's tile shape also drives the zero-tile
+    accounting so reported skip ratios match what the kernel would skip.
+    """
 
     def __init__(self, qparams: dict, cfg: gnn.GNNConfig, feat_bits: int = 8,
-                 tile_m: int = 8, tile_w: int = 4):
+                 backend=None, policy: api.ExecutionPolicy | None = None):
         self.qparams = qparams
         self.cfg = cfg
         self.feat_bits = feat_bits
-        self.tile_m, self.tile_w = tile_m, tile_w
+        self.backend = backend
+        self.policy = policy  # None = resolve the active context per call
         self.stats = ServeStats()
 
     def infer_batch(self, batch: SubgraphBatch) -> np.ndarray:
@@ -62,11 +72,14 @@ class GNNServer:
         x = xq.astype(jnp.float32) * meta["scale"] + meta["zero"]
         deg = jnp.sum(adj, axis=1, keepdims=True).astype(jnp.float32)
         inv_deg = 1.0 / (deg + 1.0)
-        logits = gnn.forward_qgtc(self.qparams, adj, x, inv_deg, self.cfg)
+        logits = gnn.forward_qgtc(self.qparams, adj, x, inv_deg, self.cfg,
+                                  backend=self.backend, policy=self.policy)
         # zero-tile accounting on the packed adjacency (paper Fig. 8b)
+        pol = self.policy if self.policy is not None else api.current()[1]
+        tm, tw = pol.block_m, pol.block_w
         ap = bitops.pack_a(adj, 1)[0]
-        ap = bitops.pad_to(bitops.pad_to(ap, 0, self.tile_m), 1, self.tile_w)
-        occ = tile_occupancy(ap, self.tile_m, self.tile_w)
+        ap = bitops.pad_to(bitops.pad_to(ap, 0, tm), 1, tw)
+        occ = tile_occupancy(ap, tm, tw)
         st = occupancy_stats(occ)
         self.stats.tiles_total += st["tiles_total"]
         self.stats.tiles_nonzero += st["tiles_nonzero"]

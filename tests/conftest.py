@@ -1,0 +1,104 @@
+"""Pytest config: fixed-seed fallback for the optional ``hypothesis`` dep.
+
+The property tests use hypothesis when it is installed. When it is not
+(it's an optional dev dependency), this shim installs a miniature
+implementation of the subset the suite uses — ``given``, ``settings``
+profiles, and the ``integers/booleans/sampled_from/composite`` strategies —
+that runs the same properties on deterministic seeds (example 0 is the
+all-minimal draw; the rest derive from a crc32 of the test name). Coverage
+is thinner than real hypothesis (no shrinking, no edge-case heuristics)
+but the suite passes without the dependency.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import numpy as np
+
+    _max_examples = {"value": 20}
+
+    class _Strategy:
+        def __init__(self, draw_fn, minimal_fn):
+            self._draw = draw_fn
+            self._minimal = minimal_fn
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def minimal(self):
+            return self._minimal()
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            lambda: min_value)
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), lambda: False)
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                         lambda: seq[0])
+
+    def composite(fn):
+        def factory(*args, **kw):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kw),
+                lambda: fn(lambda s: s.minimal(), *args, **kw))
+        return factory
+
+    class settings:  # noqa: N801  (mirrors the hypothesis name)
+        _profiles: dict = {}
+
+        def __init__(self, **kw):
+            pass  # decorator form unused by this suite
+
+        def __call__(self, fn):
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            _max_examples["value"] = cls._profiles.get(name, {}).get(
+                "max_examples", 20)
+
+    def given(*strategies):
+        def deco(fn):
+            # NOT functools.wraps: pytest would introspect the wrapped
+            # signature and treat the drawn parameters as fixtures
+            def wrapper(*args, **kw):
+                name = f"{fn.__module__}.{fn.__qualname__}"
+                for i in range(_max_examples["value"]):
+                    if i == 0:
+                        vals = [s.minimal() for s in strategies]
+                    else:
+                        rng = np.random.default_rng(
+                            zlib.crc32(f"{name}:{i}".encode()))
+                        vals = [s.draw(rng) for s in strategies]
+                    fn(*args, *vals, **kw)
+            for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+        return deco
+
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    strategies_mod.integers = integers
+    strategies_mod.booleans = booleans
+    strategies_mod.sampled_from = sampled_from
+    strategies_mod.composite = composite
+
+    hypothesis_mod = types.ModuleType("hypothesis")
+    hypothesis_mod.given = given
+    hypothesis_mod.settings = settings
+    hypothesis_mod.strategies = strategies_mod
+    sys.modules["hypothesis"] = hypothesis_mod
+    sys.modules["hypothesis.strategies"] = strategies_mod

@@ -1,0 +1,217 @@
+"""The repro.api dispatch layer: cross-backend exactness, policy plumbing,
+registry semantics, and the impl= deprecation shims."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import bitops, bittensor as bt
+from repro.core.qgemm import qgemm, weight_quantize, wq_matmul
+from repro.core.quantize import calibrate
+
+BACKENDS = ("xla_dot", "popcount", "pallas")
+
+
+def _pair(s, t, m=8, k=65, n=9, seed=None):
+    rng = np.random.default_rng(seed if seed is not None else s * 100 + t)
+    a = rng.integers(0, 1 << s, (m, k)).astype(np.int32)
+    b = rng.integers(0, 1 << t, (k, n)).astype(np.int32)
+    return a, b
+
+
+# ------------------------------------------------- cross-backend equivalence
+
+@pytest.mark.parametrize("s", range(1, 9))
+@pytest.mark.parametrize("t", range(1, 9))
+def test_backends_identical_all_bitwidths(s, t):
+    """Every registered backend returns the SAME exact int32 result for
+    every (s, t) in (1..8)x(1..8) — the repo's core invariant."""
+    a, b = _pair(s, t)
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    for name in api.list_backends():
+        got = api.bitserial_mm(jnp.asarray(a), jnp.asarray(b), s, t,
+                               backend=name)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=name)
+
+
+def test_wide_bitwidths_fall_back_past_pallas():
+    """>8-bit operands (e.g. 16-bit BitTensors) still compute exactly:
+    pallas probes False and the registry falls back to a jnp backend."""
+    a, b = _pair(12, 10, m=5, k=40, n=4, seed=8)
+    ta = bt.to_bit(jnp.asarray(a), 12, pack_axis=1)
+    tb = bt.to_bit(jnp.asarray(b), 10, pack_axis=0)
+    assert not api.get_backend("pallas").supports("bitserial_mm", s=12, t=10)
+    with api.use("pallas"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            got = bt.bitmm2int(ta, tb)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  a.astype(np.int64) @ b.astype(np.int64))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_packed_path_matches_vals_path(backend):
+    s, t = 3, 2
+    a, b = _pair(s, t, m=11, k=100, n=7)
+    ta = bt.to_bit(jnp.asarray(a), s, pack_axis=1)
+    tb = bt.to_bit(jnp.asarray(b), t, pack_axis=0)
+    with api.use(backend):
+        got = bt.bitmm2int(ta, tb)
+    np.testing.assert_array_equal(np.asarray(got), a.astype(np.int64) @ b)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bgemm_equivalence(backend):
+    rng = np.random.default_rng(5)
+    a = (rng.random((40, 200)) < 0.2).astype(np.int32)
+    b = (rng.random((200, 24)) < 0.5).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), 1)[0]
+    bp = bitops.pack_b(jnp.asarray(b), 1)[0]
+    got = api.bgemm(ap, bp, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), a @ b)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bitpack_equivalence(backend):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(13, 70)), jnp.float32)
+    qp = calibrate(x, 5)
+    got = api.bitpack(x, qp.scale, qp.zero, nbits=5, backend=backend)
+    want = bitops.pack_a(
+        jnp.clip(jnp.floor((x - qp.zero) / qp.scale), 0, 31).astype(jnp.int32), 5)
+    assert got.shape == want.shape  # all backends emit (nbits, M, ceil(K/32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bitserial_fused_equivalence(backend):
+    from repro.kernels import ref as kref
+
+    s, t, m, k, n = 2, 3, 16, 96, 24
+    a, b = _pair(s, t, m=m, k=k, n=n, seed=3)
+    ap = bitops.pack_a(jnp.asarray(a), s)
+    bp = bitops.pack_b(jnp.asarray(b), t)
+    rng = np.random.default_rng(4)
+    alpha = jnp.asarray(rng.random((m, 1)) * 0.01, jnp.float32)
+    beta = jnp.asarray(rng.random((1, n)), jnp.float32)
+    got = api.bitserial_fused(ap, bp, alpha, beta, out_bits=4, relu=True,
+                              backend=backend)
+    want = kref.bitserial_fused_ref(ap, bp, alpha, beta, 4, True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_wq_mm_dispatch_and_fallback():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    wq = weight_quantize(w, 8)
+    want = np.asarray(wq_matmul(x, wq, out_dtype=jnp.float32))
+    # popcount lacks wq_mm: the registry must fall back, not fail
+    with api.use("popcount"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            got = np.asarray(wq_matmul(x, wq, out_dtype=jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+# -------------------------------------------------------- policy + context
+
+def test_policy_is_frozen_hashable_and_validates():
+    p = api.ExecutionPolicy(block_m=16, jump="mask")
+    assert hash(p) == hash(api.ExecutionPolicy(block_m=16, jump="mask"))
+    assert p.replace(jump="compact").jump == "compact"
+    with pytest.raises(ValueError):
+        api.ExecutionPolicy(jump="sideways")
+    with pytest.raises(ValueError):
+        api.ExecutionPolicy(mode="gpu")
+    with pytest.raises(ValueError):
+        api.ExecutionPolicy(block_m=0)
+
+
+def test_use_context_nesting_and_override():
+    base_be, base_pol = api.current()
+    pol = api.ExecutionPolicy(jump="compact")
+    with api.use("popcount", policy=pol):
+        be, p = api.current()
+        assert be.name == "popcount" and p.jump == "compact"
+        with api.use("pallas"):  # inherits the surrounding policy
+            be2, p2 = api.current()
+            assert be2.name == "pallas" and p2.jump == "compact"
+        be3, _ = api.current()
+        assert be3.name == "popcount"
+    be4, p4 = api.current()
+    assert be4.name == base_be.name and p4 == base_pol
+
+
+def test_explicit_backend_never_falls_back():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    wq = weight_quantize(jnp.asarray(rng.normal(size=(32, 8)), jnp.float32), 4)
+    with pytest.raises(api.UnsupportedOpError):
+        api.wq_mm(x, wq, backend="popcount")
+
+
+def test_supports_probing():
+    pallas = api.get_backend("pallas")
+    xla = api.get_backend("xla_dot")
+    assert pallas.supports("bitserial_mm", s=8, t=8)
+    assert not pallas.supports("bitserial_mm", s=9, t=1)  # bitwidth probe
+    assert not pallas.supports("wq_mm")
+    assert xla.supports("wq_mm")
+    assert "compact" in pallas.jump_modes and "compact" not in xla.jump_modes
+    assert pallas.interpret_fallback and not xla.interpret_fallback
+
+
+def test_pallas_no_reuse_schedule_matches():
+    """policy.reuse=False (fig9a ablation) computes the same result."""
+    s, t = 2, 2
+    a, b = _pair(s, t, m=8, k=64, n=8, seed=11)
+    ap = bitops.pack_a(jnp.asarray(a), s)
+    bp = bitops.pack_b(jnp.asarray(b), t)
+    ref = api.bitserial_mm_packed(ap, bp, backend="pallas")
+    got = api.bitserial_mm_packed(ap, bp, backend="pallas",
+                                  policy=api.ExecutionPolicy(reuse=False))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ------------------------------------------------------- deprecation shims
+
+def test_qgemm_impl_shim_warns_and_routes():
+    a, b = _pair(2, 2, m=5, k=40, n=6, seed=1)
+    want = a.astype(np.int64) @ b
+    for impl in ("dot", "popcount", "pallas"):
+        with pytest.warns(DeprecationWarning, match="impl"):
+            got = qgemm(jnp.asarray(a), jnp.asarray(b), 2, 2, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=impl)
+    with pytest.raises(ValueError, match="unknown impl"):
+        with pytest.warns(DeprecationWarning):
+            qgemm(jnp.asarray(a), jnp.asarray(b), 2, 2, impl="cuda")
+    with pytest.raises(ValueError, match="not both"):
+        qgemm(jnp.asarray(a), jnp.asarray(b), 2, 2, impl="dot",
+              backend="pallas")
+
+
+def test_bitmm_impl_shims_warn_and_route():
+    a, b = _pair(3, 2, m=6, k=50, n=5, seed=2)
+    ta = bt.to_bit(jnp.asarray(a), 3, pack_axis=1)
+    tb = bt.to_bit(jnp.asarray(b), 2, pack_axis=0)
+    want = a.astype(np.int64) @ b
+    with pytest.warns(DeprecationWarning, match="impl"):
+        got = bt.bitmm2int(ta, tb, impl="popcount")
+    np.testing.assert_array_equal(np.asarray(got), want)
+    with pytest.warns(DeprecationWarning, match="impl"):
+        out = bt.bitmm2bit(ta, tb, 4, impl="dot")
+    ref = bt.bitmm2bit(ta, tb, 4)
+    np.testing.assert_array_equal(np.asarray(bt.to_val(out)),
+                                  np.asarray(bt.to_val(ref)))
+
+
+def test_registry_rejects_duplicates_and_unknown():
+    with pytest.raises(KeyError, match="unknown backend"):
+        api.get_backend("tensorrt")
+    with pytest.raises(ValueError, match="already registered"):
+        api.register(api.get_backend("pallas"))
+    assert tuple(api.list_backends()) == BACKENDS

@@ -28,8 +28,7 @@ def qmat_pair(draw):
 def test_bitserial_dot_exact(pair):
     s, t, a, b = pair
     want = a.astype(np.int64) @ b.astype(np.int64)
-    got = bitops.bitserial_matmul(jnp.asarray(a), jnp.asarray(b), s, t,
-                                  impl="dot")
+    got = bitops.bitserial_matmul_planes(jnp.asarray(a), jnp.asarray(b), s, t)
     np.testing.assert_array_equal(np.asarray(got), want)
 
 
@@ -37,9 +36,10 @@ def test_bitserial_dot_exact(pair):
 def test_bitserial_popcount_exact(pair):
     s, t, a, b = pair
     want = a.astype(np.int64) @ b.astype(np.int64)
-    got = bitops.bitserial_matmul(jnp.asarray(a), jnp.asarray(b), s, t,
-                                  impl="popcount")
-    np.testing.assert_array_equal(np.asarray(got), want)
+    got = bitops.bitserial_matmul_packed(
+        bitops.pack_a(jnp.asarray(a), s), bitops.pack_b(jnp.asarray(b), t))
+    np.testing.assert_array_equal(np.asarray(got)[: a.shape[0], : b.shape[1]],
+                                  want)
 
 
 @given(st.integers(1, 8), st.integers(1, 40), st.integers(1, 130),

@@ -8,6 +8,9 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
 
 from repro.train.optimizer import (compress_grads, compression_init,
                                    decompress_grads)

