@@ -8,7 +8,6 @@ and the per-layer matmul primitive is ``repro.api.nn.wq_linear``.
 
 Run:  PYTHONPATH=src python examples/serve_quantized_lm.py
 """
-import contextlib
 import dataclasses
 
 import jax
@@ -19,11 +18,7 @@ from repro import api, configs
 from repro.api import nn as qnn
 from repro.configs.base import smoke_config
 from repro.core.qgemm import weight_quantize
-
-try:  # dist subsystem is optional; without it serve unsharded
-    from repro.dist import sharding as shd
-except ImportError:
-    shd = None
+from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.launch.serve import DecodeEngine
 from repro.models import lm
@@ -34,9 +29,7 @@ def main():
     cfg = smoke_config(configs.get("codeqwen1.5-7b"))
     cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, d_ff=256)
     mesh = make_local_mesh()
-    shard = (shd.shard_ctx(mesh, shd.make_rules("serve")) if shd is not None
-             else contextlib.nullcontext())
-    with mesh, shard:
+    with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg)
 
         # --- QGTC weight-only quantization of every 2-D projection ---------

@@ -28,14 +28,23 @@ from repro.train import optimizer as opt
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1.5-7b")
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--small", action="store_true",
                     help="~27M variant for quick CPU runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: ~27M dims, a handful of steps")
     args = ap.parse_args()
+    if args.smoke:
+        args.small = True
+    # --smoke only changes the DEFAULTS; explicit flags always win
+    smoke = args.smoke
+    args.steps = args.steps if args.steps is not None else (3 if smoke else 300)
+    args.batch = args.batch if args.batch is not None else (2 if smoke else 8)
+    args.seq = args.seq if args.seq is not None else (32 if smoke else 256)
 
     base = configs.get(args.arch)
     # ~100M-parameter variant of the same family (--small: ~27M for quick

@@ -1,0 +1,192 @@
+"""Atomic filesystem checkpoints with elastic restore.
+
+Layout (one directory per step, written atomically):
+
+    <dir>/step_0000000010/
+        manifest.json       {"step", "cfg_hash", "n_leaves", "shapes",
+                             "dtypes", "mesh_shape", "format"}
+        leaf_00000.npy      flattened pytree leaves, in jax.tree order
+        leaf_00001.npy
+        ...
+
+Atomicity: leaves + manifest are written into ``step_N.tmp`` and the
+directory is ``os.replace``d into place as the last operation, so a crash
+mid-write leaves at most a stale ``.tmp`` (ignored by readers, cleaned by
+the next save) and never a half-valid step.
+
+Elastic restore: leaves are stored fully gathered (host numpy), so a
+checkpoint written on one mesh restores onto any other — pass
+``shardings=`` (a pytree of NamedShardings for the *new* mesh) and each
+leaf is ``device_put`` straight into its new layout.
+
+Non-native dtypes (bfloat16 & friends) survive the .npy round trip via a
+byte view: numpy serializes them as void records, so the manifest records
+the true dtype name and restore views the bytes back.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "list_steps", "latest_step", "config_hash"]
+
+_STEP_RE = re.compile(r"step_(\d{10})$")
+
+
+def _step_name(step: int) -> str:
+    return f"step_{step:010d}"
+
+
+def config_hash(obj) -> str:
+    """Stable short hash of any repr-able config bundle."""
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+def list_steps(base) -> list[int]:
+    base = Path(base)
+    if not base.is_dir():
+        return []
+    out = []
+    for d in base.iterdir():
+        m = _STEP_RE.fullmatch(d.name)
+        if m and d.is_dir():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(base) -> int | None:
+    steps = list_steps(base)
+    return steps[-1] if steps else None
+
+
+def _recover_old_tmp(base: Path) -> None:
+    """Finish any re-save interrupted between its two os.replace calls.
+
+    A ``step_N.old.tmp`` is the previously valid step N moved aside by
+    save(); if step N itself is missing, the crash hit the window before
+    the new copy landed — move the old copy back so the step survives.
+    """
+    for old in base.glob("step_*.old.tmp"):
+        final = base / old.name[: -len(".old.tmp")]
+        if final.exists():
+            shutil.rmtree(old, ignore_errors=True)  # superseded copy
+        else:
+            os.replace(old, final)
+
+
+def save(base, step: int, tree, *, cfg_hash: str | None = None,
+         keep: int | None = None, mesh_shape=None) -> Path:
+    """Atomically write `tree` as checkpoint `step` under `base`.
+
+    keep=N      after the write, delete all but the newest N steps
+    mesh_shape  recorded in the manifest (informational: the mesh the
+                run was on; restore works on any mesh regardless)
+    """
+    base = Path(base)
+    base.mkdir(parents=True, exist_ok=True)
+    _recover_old_tmp(base)
+    for stale in base.glob("step_*.tmp"):  # crash leftovers from prior runs
+        if stale.name.endswith(".old.tmp"):
+            continue  # handled by _recover_old_tmp
+        shutil.rmtree(stale, ignore_errors=True)
+
+    leaves = jax.tree.leaves(tree)
+    tmp = base / (_step_name(step) + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    shapes, dtypes = [], []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        shapes.append(list(arr.shape))
+        dtypes.append(str(arr.dtype))
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+    manifest = {
+        "format": 1,
+        "step": int(step),
+        "cfg_hash": cfg_hash,
+        "n_leaves": len(leaves),
+        "shapes": shapes,
+        "dtypes": dtypes,
+        "mesh_shape": dict(mesh_shape) if mesh_shape is not None else None,
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+    final = base / _step_name(step)
+    old = None
+    if final.exists():  # re-save of the same step (e.g. final == periodic):
+        # move the valid copy aside, not rmtree: if a crash hits between
+        # the two os.replace calls, the next save/restore finds the
+        # .old.tmp via _recover_old_tmp and the step is never lost
+        old = base / (_step_name(step) + ".old.tmp")
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+    os.replace(tmp, final)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+
+    if keep is not None:
+        for old in list_steps(base)[:-keep]:
+            shutil.rmtree(base / _step_name(old), ignore_errors=True)
+    return final
+
+
+def restore(base, like, *, cfg_hash: str | None = None,
+            step: int | None = None, shardings=None):
+    """Load checkpoint `step` (default: latest) as the structure of `like`.
+
+    Returns ``(tree, manifest)``.  Validates `cfg_hash` (if both sides
+    have one) and the leaf count against `like` before touching devices.
+    With ``shardings=`` (pytree of Shardings matching `like`), each leaf
+    is placed directly into that layout — the elastic-restore path.
+    """
+    base = Path(base)
+    if base.is_dir():
+        _recover_old_tmp(base)  # finish any interrupted re-save first
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {base}")
+    d = base / _step_name(step)
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    if cfg_hash is not None and manifest.get("cfg_hash") is not None \
+            and manifest["cfg_hash"] != cfg_hash:
+        raise ValueError(
+            f"cfg_hash mismatch: checkpoint has {manifest['cfg_hash']!r}, "
+            f"caller expects {cfg_hash!r} — refusing to restore")
+
+    flat, treedef = jax.tree.flatten(like)
+    if manifest["n_leaves"] != len(flat):
+        raise ValueError(
+            f"leaf count mismatch: checkpoint has {manifest['n_leaves']} "
+            f"leaves, restore target has {len(flat)}")
+    for i, (leaf, shape) in enumerate(zip(flat, manifest["shapes"])):
+        if hasattr(leaf, "shape") and list(leaf.shape) != list(shape):
+            raise ValueError(
+                f"shape mismatch at leaf_{i:05d}: checkpoint has {shape}, "
+                f"restore target has {list(leaf.shape)}")
+
+    loaded = []
+    for i, dtype_name in enumerate(manifest["dtypes"]):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        want = np.dtype(dtype_name)
+        if arr.dtype != want:  # bfloat16 etc. round-trip as void records
+            arr = arr.view(want)
+        loaded.append(arr)
+    tree = jax.tree.unflatten(treedef, loaded)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                            tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, manifest

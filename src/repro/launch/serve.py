@@ -19,7 +19,6 @@ Example:
 from __future__ import annotations
 
 import argparse
-import contextlib
 import json
 import time
 
@@ -30,11 +29,7 @@ import numpy as np
 from repro import configs
 from repro.api import nn as qnn
 from repro.configs.base import smoke_config
-
-try:  # the dist subsystem is optional: serve unsharded without it
-    from repro.dist import sharding as shd
-except ImportError:
-    shd = None
+from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm
 from repro.train import data as data_lib
@@ -112,9 +107,7 @@ def main(argv=None) -> dict:
     if args.smoke:
         cfg = smoke_config(cfg)
     mesh = make_local_mesh()
-    shard = (shd.shard_ctx(mesh, shd.make_rules("serve")) if shd is not None
-             else contextlib.nullcontext())
-    with mesh, shard:
+    with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         params, _ = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
         if args.wq_bits:
             params, qstats = qnn.quantize_lm_params(params, args.wq_bits)

@@ -4,14 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-try:  # dist subsystem is optional; without it run unsharded
-    from repro.dist.sharding import constrain
-except ImportError:
-    def constrain(x, *specs):
-        return x
+# no-op outside a repro.dist shard_ctx; real constraint inside one
+from repro.dist.sharding import constrain
 
-__all__ = ["rms_norm", "layer_norm", "rope", "apply_rope", "dense",
-           "cross_entropy", "Initializer"]
+__all__ = ["constrain", "rms_norm", "layer_norm", "rope", "apply_rope",
+           "dense", "cross_entropy", "Initializer"]
 
 
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import constrain  # gated identity fallback lives there
+from repro.models.layers import constrain  # no-op outside repro.dist shard_ctx
 from repro.models import ssm as S
 from repro.models import transformer as T
 from repro.models.layers import Initializer, layer_norm, rms_norm

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import constrain  # gated identity fallback lives there
+from repro.models.layers import constrain  # no-op outside repro.dist shard_ctx
 from repro.models.layers import Initializer, layer_norm
 
 __all__ = [

@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist", reason="dist subsystem not built yet")
 
 from repro.dist import checkpoint as ckpt
 from repro.dist.elastic import StragglerWatchdog, replan_mesh

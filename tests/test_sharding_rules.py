@@ -1,0 +1,99 @@
+"""Rule-table completeness: every logical axis name the models use must
+resolve (to a mesh axis or an explicit None) in every make_rules mode."""
+import ast
+import itertools
+import os
+
+import pytest
+
+from repro.dist import sharding as shd
+
+MODELS_DIR = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                          "models")
+MESH_AXES = {"pod", "data", "model"}
+
+
+def _constrain_axis_names() -> set:
+    """Every string literal passed to a constrain(...) call in models/."""
+    names = set()
+    for fname in sorted(os.listdir(MODELS_DIR)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(MODELS_DIR, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            callee = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None)
+            if callee != "constrain":
+                continue
+            for arg in node.args[1:]:
+                if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                    names.add(arg.value)
+    return names
+
+
+def _rules_get_names() -> set:
+    """Logical names the models look up directly via rules.get("...")."""
+    names = set()
+    for fname in sorted(os.listdir(MODELS_DIR)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(MODELS_DIR, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "get"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "rules"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)):
+                names.add(node.args[0].value)
+    return names
+
+
+ALL_COMBOS = list(itertools.product(
+    ["train", "serve"], [False, True], [False, True], [False, True]))
+
+
+def test_models_actually_use_constrain():
+    # guard against the scanner silently matching nothing
+    names = _constrain_axis_names()
+    assert len(names) >= 8, names
+    assert "batch" in names and "qkv_compute" in names
+
+
+@pytest.mark.parametrize("mode,multi_pod,context_parallel,zero3", ALL_COMBOS)
+def test_every_constrain_axis_resolves(mode, multi_pod, context_parallel,
+                                       zero3):
+    rules = shd.make_rules(mode, multi_pod=multi_pod,
+                           context_parallel=context_parallel, zero3=zero3)
+    used = _constrain_axis_names() | _rules_get_names()
+    missing = sorted(n for n in used if n not in rules)
+    assert not missing, (
+        f"make_rules({mode!r}, multi_pod={multi_pod}, "
+        f"context_parallel={context_parallel}, zero3={zero3}) has no entry "
+        f"for logical axes {missing} used by models/")
+    for name in used:
+        val = rules[name]
+        if val is None:
+            continue
+        axes = (val,) if isinstance(val, str) else tuple(val)
+        assert axes and set(axes) <= MESH_AXES, (name, val)
+
+
+@pytest.mark.parametrize("mode,multi_pod,context_parallel,zero3", ALL_COMBOS)
+def test_declared_logical_axes_all_present(mode, multi_pod, context_parallel,
+                                           zero3):
+    rules = shd.make_rules(mode, multi_pod=multi_pod,
+                           context_parallel=context_parallel, zero3=zero3)
+    missing = [n for n in shd.LOGICAL_AXES if n not in rules]
+    assert not missing, missing
+
+
+def test_make_rules_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        shd.make_rules("deploy")

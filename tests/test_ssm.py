@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist", reason="dist subsystem not built yet (models import repro.dist.sharding)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import ssm
