@@ -65,7 +65,9 @@ def main():
     st = server.stats
     print(f"# serving stats: {st.batches} batches, {st.nodes} nodes, "
           f"zero-tile skip ratio {st.zero_tile_skip_ratio:.1%}, "
-          f"packed transfer {st.transfer_bytes / 1e6:.2f} MB")
+          f"packed transfer {st.transfer_bytes / 1e6:.2f} MB, "
+          f"p50 {st.p50_s * 1e3:.1f} ms / p95 {st.p95_s * 1e3:.1f} ms, "
+          f"{st.nodes_per_s:.0f} nodes/s")
     print("OK")
 
 

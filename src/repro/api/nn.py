@@ -19,9 +19,36 @@ import jax
 import jax.numpy as jnp
 
 from repro import api
-from repro.core.quantize import QuantParams, affine_matmul_correction
+from repro.core.quantize import (QuantParams, affine_matmul_correction,
+                                 calibrate, dequantize, quantize)
 
-__all__ = ["qlinear", "qgraph_conv", "wq_linear", "quantize_lm_params"]
+__all__ = ["as_quantized", "qlinear", "qgraph_conv", "wq_linear",
+           "quantize_lm_params"]
+
+
+def as_quantized(x, nbits: int) -> tuple[jax.Array, QuantParams]:
+    """Normalize a layer input to the quantized domain.
+
+    Accepts either a float tensor (calibrate + quantize, the default
+    training-parity path) or an already-quantized ``(xq, QuantParams)``
+    pair — the §4.6 fast path, where the compound transfer delivers packed
+    integer features and requantizing a dequantized roundtrip would only
+    add noise and work. The fast path applies only when the pair's
+    bit-width already matches ``nbits``; a mismatched pair (e.g. 8-bit
+    transfer feeding a 4-bit model) is rescaled through float so the layer
+    always computes at its configured precision.
+    """
+    if isinstance(x, tuple):
+        xq, qp = x
+        if not isinstance(qp, QuantParams):
+            raise TypeError(
+                f"pre-quantized input must be (xq, QuantParams), got "
+                f"(..., {type(qp).__name__})")
+        if qp.nbits == nbits:
+            return xq, qp
+        x = dequantize(xq, qp)
+    qp = calibrate(x, nbits)
+    return quantize(x, qp), qp
 
 
 def qlinear(xq, qpx: QuantParams, wq, qpw: QuantParams, *, bias=None,

@@ -87,7 +87,12 @@ def _fake_quant_fwd(x, nbits, qp):
     if qp is None:
         qp = calibrate(x, nbits)
     y = dequantize(quantize(x, qp), qp)
-    in_range = (x >= qp.zero) & (x <= qp.zero + qp.scale * (1 << nbits))
+    # gradient passes iff quantize() does not clip: floor((x-zero)/scale)
+    # lands in [0, qmax], i.e. x in [zero, zero + scale*(qmax+1)). The upper
+    # bound is STRICT — at x == zero + scale*2**nbits, floor gives 2**nbits
+    # which IS clipped to qmax, so the STE must block it.
+    qmax = (1 << nbits) - 1
+    in_range = (x >= qp.zero) & (x < qp.zero + qp.scale * (qmax + 1))
     return y, in_range
 
 

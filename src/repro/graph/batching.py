@@ -75,9 +75,16 @@ def make_batches(
 
 def batch_iterator(batches: list[SubgraphBatch], epochs: int, seed: int = 0
                    ) -> Iterator[tuple[int, SubgraphBatch]]:
-    """Deterministic, step-resumable iterator: step -> batch mapping is pure."""
+    """Deterministic, step-resumable iterator: step -> batch mapping is pure.
+
+    The epoch permutation is drawn once per epoch (not re-generated every
+    step); the (seed, epoch) -> order mapping is unchanged, so the yielded
+    sequence is identical to the per-step formulation.
+    """
     n = len(batches)
-    for step in range(epochs * n):
-        epoch, i = divmod(step, n)
+    step = 0
+    for epoch in range(epochs):
         order = np.random.default_rng(seed + epoch).permutation(n)
-        yield step, batches[order[i]]
+        for i in range(n):
+            yield step, batches[int(order[i])]
+            step += 1

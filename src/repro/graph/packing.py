@@ -24,8 +24,9 @@ from repro.core.bitops import np_pack_words
 from repro.graph.batching import SubgraphBatch
 from repro.graph.sparse import sparse_to_dense
 
-__all__ = ["pack_compound", "unpack_compound", "transfer_dense",
-           "transfer_sparse", "transfer_packed", "compound_nbytes"]
+__all__ = ["pack_compound", "unpack_compound", "pack_feats", "unpack_feats",
+           "transfer_dense", "transfer_sparse", "transfer_packed",
+           "transfer_packed_feats", "compound_nbytes"]
 
 _HDR = 8  # header words: n_nodes, n_valid, n_edges, dim, nbits, e_cap, wpf, reserved
 
@@ -37,6 +38,20 @@ def _quantize_feats(features: np.ndarray, nbits: int):
     return q.astype(np.uint32), scale, fmin
 
 
+def _pack_body(batch: SubgraphBatch, nbits: int, e_cap: int):
+    """Shared compound-layout core: quantize + bit-plane-pack + header."""
+    q, scale, zero = _quantize_feats(batch.features, nbits)
+    n, d = q.shape
+    planes = np.stack([(q >> i) & 1 for i in range(nbits)])  # (nbits, N, D)
+    packed = np_pack_words(planes)  # (nbits, N, ceil(D/32))
+    wpf = packed.shape[-1]
+    header = np.array([batch.n_nodes, batch.n_valid, batch.n_edges, d, nbits,
+                       e_cap, wpf, 0], dtype=np.uint32)
+    meta = {"scale": scale, "zero": zero, "n": n, "d": d, "nbits": nbits,
+            "e_cap": e_cap, "wpf": wpf}
+    return header, packed, meta
+
+
 def pack_compound(batch: SubgraphBatch, nbits: int = 8) -> tuple[np.ndarray, dict]:
     """Pack one subgraph batch into a single uint32 buffer (strategy III).
 
@@ -45,22 +60,33 @@ def pack_compound(batch: SubgraphBatch, nbits: int = 8) -> tuple[np.ndarray, dic
     the transfer cost scales with nbits (the paper's bit-level saving
     extends to the link, not just HBM).
     """
-    q, scale, zero = _quantize_feats(batch.features, nbits)
-    n, d = q.shape
-    planes = np.stack([(q >> i) & 1 for i in range(nbits)])  # (nbits, N, D)
-    packed = np_pack_words(planes)  # (nbits, N, ceil(D/32))
-    wpf = packed.shape[-1]
-    e_cap = batch.edges.shape[1]
-    header = np.array([batch.n_nodes, batch.n_valid, batch.n_edges, d, nbits,
-                       e_cap, wpf, 0], dtype=np.uint32)
+    header, packed, meta = _pack_body(batch, nbits, batch.edges.shape[1])
     buf = np.concatenate([
         header,
         batch.edges.astype(np.int32).view(np.uint32).ravel(),
         packed.ravel(),
     ])
-    meta = {"scale": scale, "zero": zero, "n": n, "d": d, "nbits": nbits,
-            "e_cap": e_cap, "wpf": wpf}
     return buf, meta
+
+
+def pack_feats(batch: SubgraphBatch, nbits: int = 8) -> tuple[np.ndarray, dict]:
+    """Features-only compound buffer (header | packed quantized features).
+
+    The serving tile cache (§4.4 extended across requests) keeps the
+    adjacency artifacts — dense form, packed bit-planes, occupancy — on
+    device; a repeat subgraph then only needs its (fresh) features shipped.
+    Same header/bit-plane layout as :func:`pack_compound`, minus the edges
+    (header e_cap = 0).
+    """
+    header, packed, meta = _pack_body(batch, nbits, e_cap=0)
+    buf = np.concatenate([header, packed.ravel()])
+    return buf, meta
+
+
+@functools.partial(jax.jit, static_argnames=("n", "nbits", "wpf"))
+def unpack_feats(buf: jax.Array, *, n: int, nbits: int, wpf: int):
+    """Device-side unpack of a features-only compound buffer."""
+    return buf[_HDR:_HDR + nbits * n * wpf].reshape(nbits, n, wpf)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "d", "nbits", "e_cap", "wpf"))
@@ -77,8 +103,6 @@ def unpack_compound(buf: jax.Array, *, n: int, d: int, nbits: int, e_cap: int,
 
 def transfer_dense(batch: SubgraphBatch, device=None):
     """Strategy I: dense adjacency + dense features, two transfers."""
-    from repro.graph.sparse import csr_to_dense  # local to avoid cycle
-
     n = batch.n_nodes
     adj = np.zeros((n, n), np.int32)
     e = batch.edges
@@ -107,6 +131,15 @@ def transfer_packed(batch: SubgraphBatch, nbits: int = 8, device=None):
     return adj, packed, meta
 
 
+def transfer_packed_feats(batch: SubgraphBatch, nbits: int = 8, device=None):
+    """Strategy III on a tile-cache hit: features-only compound transfer."""
+    buf, meta = pack_feats(batch, nbits)
+    dbuf = jax.device_put(buf, device)
+    packed = unpack_feats(dbuf, n=meta["n"], nbits=meta["nbits"],
+                          wpf=meta["wpf"])
+    return packed, meta
+
+
 def compound_nbytes(batch: SubgraphBatch, nbits: int = 8) -> dict:
     """Bytes moved under each strategy (the Fig. 9b 'derived' columns)."""
     n, d = batch.features.shape
@@ -116,4 +149,7 @@ def compound_nbytes(batch: SubgraphBatch, nbits: int = 8) -> dict:
         "I_dense": n * n * 4 + n * d * 4,
         "II_sparse": 2 * e_cap * 4 + n * d * 4,
         "III_packed": (_HDR + 2 * e_cap + nbits * n * wpf) * 4,
+        # tile-cache hit: adjacency artifacts already on device, only the
+        # features-only compound buffer moves (see pack_feats)
+        "III_feats": (_HDR + nbits * n * wpf) * 4,
     }

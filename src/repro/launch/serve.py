@@ -1,20 +1,27 @@
-"""LM serving launcher: batched prefill + decode engine.
+"""Serving launcher: LM batched prefill+decode, and GNN continuous batching.
 
-Continuous-batching-lite: requests accumulate into a fixed-size batch slot
-array; each engine step decodes one token for every live slot; finished
-slots (EOS or max tokens) are refilled from the queue. Runs real decoding
-on local devices with smoke-scale models; the full-config serving path is
-exercised by the dry-run (prefill_32k / decode_32k / long_500k lower
-serve steps on the production mesh).
+LM mode (``--arch``): continuous-batching-lite — requests accumulate into a
+fixed-size batch slot array; each engine step decodes one token for every
+live slot; finished slots (EOS or max tokens) are refilled from the queue.
+Runs real decoding on local devices with smoke-scale models; the
+full-config serving path is exercised by the dry-run (prefill_32k /
+decode_32k / long_500k lower serve steps on the production mesh).
 
 Weight-only quantization (``--wq-bits 4``) applies the QGTC bit compression
 to every large projection through ``repro.api.nn.quantize_lm_params`` —
 the same registry-dispatched pipeline the GNN stack uses — shrinking HBM
 decode traffic.
 
-Example:
+GNN mode (``--gnn DATASET``): streams repeat subgraph traffic through the
+``repro.serve.GNNServer`` continuous-batching engine (queue + shape
+buckets + tile cache, see docs/serve.md) under the ``repro.dist`` "serve"
+rule table, and prints the ServeStats summary (p50/p95 after device sync).
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
       --requests 12 --max-new 16 --wq-bits 4
+  PYTHONPATH=src python -m repro.launch.serve --gnn ogbn-arxiv --scale \
+      0.008 --rounds 3
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.configs.base import smoke_config
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm
+from repro.perf import report
 from repro.train import data as data_lib
 
 
@@ -62,33 +70,81 @@ class DecodeEngine:
                 (b, self.cfg.n_frames, self.cfg.d_model), jnp.bfloat16)
         t_start = time.time()
         logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready((logits, cache))  # prefill_s = compute, and
+        # the first decode step's latency must not absorb the prefill
         prefill_s = time.time() - t_start
         out = np.zeros((b, max_new), np.int32)
         done = np.zeros(b, bool)
+        step_lat = []
         t_dec = time.time()
         for i in range(max_new):
+            t_step = time.perf_counter()
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = jnp.minimum(nxt, self.cfg.vocab - 1)  # clamp padded vocab
-            out[:, i] = np.asarray(nxt)
+            out[:, i] = np.asarray(nxt)  # host copy = device sync point
+            step_lat.append(time.perf_counter() - t_step)
             if eos_id is not None:
                 done |= out[:, i] == eos_id
                 if done.all():
                     out = out[:, : i + 1]
                     break
-            logits, cache = self._decode(self.params, cache, nxt[:, None])
+            if i + 1 < max_new:  # the last token needs no further decode
+                logits, cache = self._decode(self.params, cache, nxt[:, None])
         decode_s = time.time() - t_dec
         stats = {
             "prefill_s": round(prefill_s, 3),
             "decode_s": round(decode_s, 3),
             "tokens_generated": int(out.size),
             "tok_per_s": round(out.size / max(decode_s, 1e-9), 1),
+            "decode_p50_s": round(report.percentile(step_lat, 50), 5),
+            "decode_p95_s": round(report.percentile(step_lat, 95), 5),
         }
         return out, stats
 
 
+def serve_gnn(args) -> dict:
+    """Stream repeat subgraph traffic through the continuous GNN engine."""
+    from repro.graph import datasets, partition
+    from repro.models import gnn
+    from repro.serve import GNNServer, requests_from_partitions
+    from repro.serve.queue import buckets_for
+
+    data = datasets.load(args.gnn, scale=args.scale, seed=args.seed)
+    parts = partition.partition(data.csr, args.parts)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes,
+                                  x_bits=args.feat_bits,
+                                  w_bits=args.feat_bits)
+    params = gnn.init_params(jax.random.PRNGKey(args.seed), cfg)
+    qparams = gnn.quantize_params(params, cfg)
+    reqs = requests_from_partitions(data, parts)
+    buckets = buckets_for(reqs, levels=3)
+    mesh = make_local_mesh()
+    # data-parallel replicas resolve through the dist "serve" rule table;
+    # the engine routes coalesced batches to replicas by fingerprint
+    # affinity (repeats hit the replica holding their cached tiles)
+    with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
+        server = GNNServer(qparams, cfg, feat_bits=args.feat_bits,
+                           buckets=buckets, mesh=mesh)
+        for rnd in range(args.rounds):
+            for r in reqs:
+                server.submit(type(r)(edges=r.edges, features=r.features,
+                                      n_nodes=r.n_nodes))
+            server.drain()
+            print(f"[serve-gnn] round {rnd}: compiles={server.n_compiles} "
+                  f"cache_hit_rate={server.cache.hit_rate:.2f}", flush=True)
+    summary = server.stats.summary()
+    summary["n_compiles"] = server.n_compiles
+    summary["replicas"] = len(list(mesh.devices.flat))
+    print(f"[serve-gnn] {json.dumps(summary)}", flush=True)
+    return summary
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM architecture to serve")
+    ap.add_argument("--gnn", metavar="DATASET",
+                    help="serve GNN subgraph traffic from this Table-1 "
+                         "dataset instead of an LM")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-slots", type=int, default=4)
@@ -98,10 +154,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--wq-bits", type=int, default=0,
                     help="weight-only quantize projections to N bits "
                          "(0 = serve full precision)")
+    # GNN-mode knobs
+    ap.add_argument("--scale", type=float, default=0.008,
+                    help="GNN dataset scale factor")
+    ap.add_argument("--parts", type=int, default=8,
+                    help="GNN partition count (= request granularity)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="GNN traffic rounds (repeats exercise the cache)")
+    ap.add_argument("--feat-bits", type=int, default=8)
     args = ap.parse_args(argv)
+    if (args.arch is None) == (args.gnn is None):
+        ap.error("pass exactly one of --arch (LM) or --gnn (GNN)")
+    if not 1 <= args.feat_bits <= 8:
+        ap.error(f"--feat-bits must be in 1..8, got {args.feat_bits}")
     if args.wq_bits and not 1 <= args.wq_bits <= 8:
         ap.error(f"--wq-bits must be in 1..8 (or 0 to disable), "
                  f"got {args.wq_bits}")
+    if args.gnn:
+        return serve_gnn(args)
 
     cfg = configs.get(args.arch)
     if args.smoke:

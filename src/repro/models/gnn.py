@@ -29,7 +29,6 @@ Model settings follow the paper: Cluster-GCN updates-then-aggregates
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -164,7 +163,7 @@ def _requant(h: jax.Array, bits: int):
 def forward_qgtc(
     qparams: dict,
     adj_bin: jax.Array,
-    x: jax.Array,
+    x,
     inv_deg: jax.Array,
     cfg: GNNConfig,
     *,
@@ -173,11 +172,15 @@ def forward_qgtc(
 ) -> jax.Array:
     """Integer-domain forward (serving path). adj_bin: (N,N) 0/1 int32.
 
-    ``backend``/``policy`` override the active repro.api context for every
-    integer GEMM in the stack.
+    ``x`` is either a float feature matrix (requantized here, the training
+    parity path) or a pre-quantized ``(xq, QuantParams)`` pair — the §4.6
+    fast path where the compound transfer feeds packed integer features
+    straight into the first integer GEMM with no dequantize -> requantize
+    roundtrip. ``backend``/``policy`` override the active repro.api context
+    for every integer GEMM in the stack.
     """
     mm = dict(backend=backend, policy=policy)
-    hq, qph = _requant(x, cfg.x_bits)
+    hq, qph = qnn.as_quantized(x, cfg.x_bits)
     for l in range(cfg.layers):
         p = qparams[f"layer{l}"]
         last = l == cfg.layers - 1

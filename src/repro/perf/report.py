@@ -1,4 +1,5 @@
-"""Render the dry-run JSON records into the EXPERIMENTS.md tables.
+"""Render the dry-run JSON records into the EXPERIMENTS.md tables,
+plus the latency-summary helpers the serving engines report through.
 
 Usage:  PYTHONPATH=src python -m repro.perf.report results/dryrun
 """
@@ -7,6 +8,39 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
+
+__all__ = ["percentile", "latency_summary", "load", "roofline_table",
+           "dryrun_table"]
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile of a sequence (q in [0, 100]); 0.0 if empty.
+
+    Dependency-free and exact on small samples — serving latency lists are
+    a few hundred entries, not a distribution to interpolate over.
+    """
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if q <= 0:
+        return float(s[0])
+    rank = int(-(-q / 100.0 * len(s) // 1))  # ceil without math import
+    return float(s[min(max(rank, 1), len(s)) - 1])
+
+
+def latency_summary(xs, prefix: str = "") -> dict:
+    """{n, mean_s, p50_s, p95_s, max_s} for a latency sample list."""
+    p = prefix
+    if not xs:
+        return {f"{p}n": 0, f"{p}mean_s": 0.0, f"{p}p50_s": 0.0,
+                f"{p}p95_s": 0.0, f"{p}max_s": 0.0}
+    return {
+        f"{p}n": len(xs),
+        f"{p}mean_s": float(sum(xs) / len(xs)),
+        f"{p}p50_s": percentile(xs, 50),
+        f"{p}p95_s": percentile(xs, 95),
+        f"{p}max_s": float(max(xs)),
+    }
 
 
 def _fmt_s(x: float) -> str:

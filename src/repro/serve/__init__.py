@@ -1,1 +1,17 @@
-# Serving substrate: batched subgraph inference + LM decode engines.
+"""Serving substrate: continuous-batching GNN engine + LM decode engines.
+
+  engine.GNNServer   — queue + micro-batcher + tile cache + quantized
+                       fast path (see docs/serve.md)
+  queue              — SubgraphRequest, shape buckets, MicroBatcher
+  cache              — cross-request non-zero tile reuse (§4.4 extended)
+
+The LM decode engine lives in repro.launch.serve (it needs mesh context).
+"""
+from repro.serve.cache import TileCache, TileEntry
+from repro.serve.engine import GNNServer, ServeStats
+from repro.serve.queue import (Bucket, MicroBatcher, SubgraphRequest,
+                               make_buckets, requests_from_partitions)
+
+__all__ = ["GNNServer", "ServeStats", "TileCache", "TileEntry", "Bucket",
+           "MicroBatcher", "SubgraphRequest", "make_buckets",
+           "requests_from_partitions"]

@@ -1,0 +1,86 @@
+"""Cross-request non-zero tile reuse cache (paper §4.4, extended).
+
+§4.4 reuses non-zero adjacency tiles across bit planes *within* one kernel
+launch; a serving system sees the same subgraphs again and again (hot
+partitions, repeat queries), so the same idea extends across requests: the
+adjacency-derived artifacts — dense 0/1 form, packed bit-plane, per-tile
+occupancy map, ``compact_tiles`` indices — depend only on the subgraph
+structure, never on the features. Cache them by subgraph fingerprint and a
+repeat request skips edge transfer, densify, bit-pack and occupancy
+analysis entirely; only its (fresh) quantized features move (the
+features-only §4.6 compound buffer, ``packing.transfer_packed_feats``).
+
+TC-GNN (PAPERS.md) motivates the same tile-occupancy-centric view of
+sparse adjacencies; here the occupancy map IS the cached object.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+
+__all__ = ["TileEntry", "TileCache"]
+
+
+@dataclasses.dataclass
+class TileEntry:
+    """Device-resident adjacency artifacts for one (batch, device) key."""
+
+    adj: jax.Array         # (n_pad, n_pad) 0/1 int32, dense
+    inv_deg: jax.Array     # (n_pad, 1) f32, (deg+1)^-1
+    a_packed: jax.Array    # (Mt, Wt) uint32 packed 1-bit plane, tile-padded
+    occupancy: jax.Array   # (Mt/tm, Wt/tw) int32 0/1 tile-occupancy map
+    compact_idx: jax.Array  # (Mt/tm, max_nnz) int32 non-zero k-tile ids
+    compact_counts: jax.Array  # (Mt/tm,) int32
+    occ_stats: dict        # occupancy_stats() snapshot (host ints)
+
+    def nbytes(self) -> int:
+        n = 0
+        for f in (self.adj, self.inv_deg, self.a_packed, self.occupancy,
+                  self.compact_idx, self.compact_counts):
+            n += f.size * f.dtype.itemsize
+        return n
+
+
+class TileCache:
+    """LRU fingerprint -> :class:`TileEntry` map with hit/miss accounting."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key) -> TileEntry | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def put(self, key, entry: TileEntry) -> None:
+        self._entries[key] = entry
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def nbytes(self) -> int:
+        return sum(e.nbytes() for e in self._entries.values())

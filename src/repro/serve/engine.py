@@ -1,16 +1,35 @@
-"""Batched serving engines.
+"""Continuous-batching GNN serving engine.
 
-GNNServer — the paper's deployment shape: stream subgraph batches through
-the quantized integer forward path with bandwidth-optimized packed
-transfers (§4.6) and zero-tile accounting (§6.4). The execution engine and
-its tuning are a constructor choice (``backend=``/``policy=`` routed
-through the repro.api registry), not baked into the model.
+``GNNServer`` is the paper's deployment shape grown into a serving
+subsystem:
 
-The LM decode engine lives in repro.launch.serve (it needs mesh context);
-this module stays host-side and single-device friendly.
+  queue + micro-batcher — incoming subgraph requests coalesce FIFO into
+      block-diagonal batches (§4.1) under a node/edge budget, padded to a
+      small fixed set of shape buckets so the jitted integer forward
+      compiles once per bucket (serve/queue.py).
+  tile reuse cache — adjacency artifacts (dense form, packed bit-planes,
+      occupancy maps, compact_tiles indices) are cached by subgraph
+      fingerprint (§4.4 extended across requests, serve/cache.py); a hot
+      subgraph skips pack+occupancy work and ships only its features.
+  quantized fast path — the §4.6 compound transfer delivers packed integer
+      features that feed ``forward_qgtc`` pre-quantized, no
+      dequantize -> requantize roundtrip.
+  multi-replica — with ``mesh=``, batches spread across the mesh's
+      devices by fingerprint affinity: a given subgraph group always
+      lands on the same replica, so repeats still hit that replica's
+      tile cache while distinct traffic balances over the fleet
+      (data-parallel serving; the launcher installs the ``repro.dist``
+      "serve" rule table around the engine so any sharded model code
+      resolves against it).
+
+The execution engine and its tuning remain a constructor choice
+(``backend=``/``policy=`` routed through the repro.api registry). The LM
+decode engine lives in repro.launch.serve (it needs mesh context); this
+module stays host-side and single-device friendly.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -20,10 +39,16 @@ import numpy as np
 
 from repro import api
 from repro.core import bitops
-from repro.core.zerotile import occupancy_stats, tile_occupancy
+from repro.core.quantize import QuantParams
+from repro.core.zerotile import compact_tiles, occupancy_stats, tile_occupancy
 from repro.graph.batching import SubgraphBatch
-from repro.graph.packing import transfer_packed
+from repro.graph.packing import (compound_nbytes, transfer_packed,
+                                 transfer_packed_feats)
 from repro.models import gnn
+from repro.perf import report
+from repro.serve.cache import TileCache, TileEntry
+from repro.serve.queue import (MicroBatcher, SubgraphRequest,
+                               subgraph_fingerprint)
 
 __all__ = ["GNNServer", "ServeStats"]
 
@@ -31,11 +56,21 @@ __all__ = ["GNNServer", "ServeStats"]
 @dataclasses.dataclass
 class ServeStats:
     batches: int = 0
+    requests: int = 0
     nodes: int = 0
     wall_s: float = 0.0
     transfer_bytes: int = 0
     tiles_total: int = 0
     tiles_nonzero: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    # per-batch compute latency (timer stopped AFTER device sync) and
+    # per-request queue->result latency; bounded windows so a long-running
+    # server reports recent percentiles without growing per request
+    batch_latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096))
+    request_latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096))
 
     @property
     def zero_tile_skip_ratio(self) -> float:
@@ -43,47 +78,218 @@ class ServeStats:
             return 0.0
         return 1.0 - self.tiles_nonzero / self.tiles_total
 
+    @property
+    def p50_s(self) -> float:
+        return report.percentile(self.batch_latencies_s, 50)
+
+    @property
+    def p95_s(self) -> float:
+        return report.percentile(self.batch_latencies_s, 95)
+
+    @property
+    def nodes_per_s(self) -> float:
+        return self.nodes / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        out = {
+            "batches": self.batches,
+            "requests": self.requests,
+            "nodes": self.nodes,
+            "wall_s": round(self.wall_s, 4),
+            "nodes_per_s": round(self.nodes_per_s, 1),
+            "transfer_bytes": self.transfer_bytes,
+            "zero_tile_skip_ratio": round(self.zero_tile_skip_ratio, 4),
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+        }
+        out.update(report.latency_summary(self.batch_latencies_s, "batch_"))
+        out.update(report.latency_summary(self.request_latencies_s, "req_"))
+        return out
+
 
 class GNNServer:
-    """Quantized batched-subgraph inference (the paper's serving loop).
+    """Quantized batched-subgraph serving (queue, cache, bucketed forward).
+
+    Two entry points share one execution path:
+
+      ``infer_batch(batch)``    — run one pre-built :class:`SubgraphBatch`
+                                  (the classic loop; examples/tests use it)
+      ``submit(req)`` + ``step()``/``drain()``
+                                — continuous batching: requests coalesce
+                                  into block-diagonal bucketed batches
 
     ``backend``/``policy`` select the execution engine through the
     repro.api registry (None = the active ``repro.api.use`` context /
     registered default). The policy's tile shape also drives the zero-tile
     accounting so reported skip ratios match what the kernel would skip.
+    ``cache_entries=0`` disables the tile cache; ``buckets=None`` disables
+    shape bucketing (exact padding, the recompile-per-shape baseline).
     """
 
     def __init__(self, qparams: dict, cfg: gnn.GNNConfig, feat_bits: int = 8,
-                 backend=None, policy: api.ExecutionPolicy | None = None):
+                 backend=None, policy: api.ExecutionPolicy | None = None,
+                 buckets=None, node_budget: int | None = None,
+                 edge_budget: int | None = None, tile: int = 128,
+                 cache_entries: int = 64, mesh=None):
         self.qparams = qparams
         self.cfg = cfg
         self.feat_bits = feat_bits
         self.backend = backend
         self.policy = policy  # None = resolve the active context per call
         self.stats = ServeStats()
+        self.cache = TileCache(cache_entries) if cache_entries > 0 else None
+        self.batcher = MicroBatcher(buckets, node_budget=node_budget,
+                                    edge_budget=edge_budget, tile=tile)
+        self._devices = (list(mesh.devices.flat) if mesh is not None
+                         else [None])
+        self._dev_params: dict = {}
+        # One jitted forward for the whole server: unpack the compound
+        # features and run the pre-quantized integer path. jax.jit caches
+        # one executable per input-shape set, i.e. per (bucket, device).
+        d_in = cfg.in_dim
+        fbits = feat_bits
+        be, pol = backend, policy
 
-    def infer_batch(self, batch: SubgraphBatch) -> np.ndarray:
-        t0 = time.time()
-        adj, packed, meta = transfer_packed(batch, nbits=self.feat_bits)
-        self.stats.transfer_bytes += (packed.size * 4 + batch.edges.size * 4)
-        # decode packed features to the quantized domain, run integer forward
-        xq = bitops.bit_compose(
-            bitops.unpack_along_axis(packed, axis=2, size=meta["d"]))
-        x = xq.astype(jnp.float32) * meta["scale"] + meta["zero"]
+        def _fwd(qp, adj, packed, scale, zero, inv_deg):
+            xq = bitops.bit_compose(
+                bitops.unpack_along_axis(packed, axis=2, size=d_in))
+            qpx = QuantParams(nbits=fbits, scale=scale, zero=zero)
+            return gnn.forward_qgtc(qp, adj, (xq, qpx), inv_deg, cfg,
+                                    backend=be, policy=pol)
+
+        self._fwd = jax.jit(_fwd)
+
+    # ------------------------------------------------------------- probes
+
+    @property
+    def n_compiles(self) -> int:
+        """Compiled forward variants (one per shape bucket per device)."""
+        cache_size = getattr(self._fwd, "_cache_size", None)
+        return int(cache_size()) if cache_size is not None else -1
+
+    # ------------------------------------------------- continuous batching
+
+    def submit(self, req: SubgraphRequest) -> int:
+        """Enqueue one subgraph request; returns its id for result lookup."""
+        req.t_enqueue = time.perf_counter()
+        self.batcher.add(req)
+        return req.req_id
+
+    def step(self) -> dict[int, np.ndarray]:
+        """Coalesce + run ONE batch off the queue; {req_id: predictions}."""
+        plan = self.batcher.next_plan()
+        if plan is None:
+            return {}
+        t0 = time.perf_counter()
+        logits, entry = self._execute(plan.batch, plan.fingerprint)
+        logits.block_until_ready()  # latency = compute, not dispatch
+        t1 = time.perf_counter()
+        self._account(plan.batch, entry, t1 - t0)
+        out = {}
+        lg = np.asarray(logits)
+        for req_id, off, n in plan.spans:
+            out[req_id] = np.argmax(lg[off:off + n], axis=-1)
+            self.stats.requests += 1
+        for r in plan.requests:
+            if r.t_enqueue is not None:
+                self.stats.request_latencies_s.append(t1 - r.t_enqueue)
+        return out
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Run until the queue is empty; results by req_id.
+
+        Results are handed to the caller, never retained by the engine —
+        a long-running serve loop must not grow memory per request.
+        """
+        out: dict[int, np.ndarray] = {}
+        while self.batcher:
+            out.update(self.step())
+        return out
+
+    # ------------------------------------------------------ one-batch path
+
+    def infer_batch(self, batch: SubgraphBatch, *, return_logits: bool = False):
+        """Run one pre-built batch; predictions for its valid nodes."""
+        t0 = time.perf_counter()
+        logits, entry = self._execute(batch, self._batch_key(batch))
+        logits.block_until_ready()  # the forward is async-dispatched: stop
+        # the timer only after the device finishes, not after dispatch
+        self._account(batch, entry, time.perf_counter() - t0)
+        self.stats.requests += 1
+        lg = np.asarray(logits)
+        preds = np.argmax(lg[:batch.n_valid], axis=-1)
+        return (preds, lg) if return_logits else preds
+
+    # ------------------------------------------------------------ internals
+
+    @staticmethod
+    def _batch_key(batch: SubgraphBatch) -> str:
+        return subgraph_fingerprint(batch.n_nodes, batch.edges)
+
+    def _params_for(self, device):
+        if device is None:
+            return self.qparams
+        if device not in self._dev_params:
+            self._dev_params[device] = jax.device_put(self.qparams, device)
+        return self._dev_params[device]
+
+    def _build_entry(self, adj) -> TileEntry:
         deg = jnp.sum(adj, axis=1, keepdims=True).astype(jnp.float32)
         inv_deg = 1.0 / (deg + 1.0)
-        logits = gnn.forward_qgtc(self.qparams, adj, x, inv_deg, self.cfg,
-                                  backend=self.backend, policy=self.policy)
-        # zero-tile accounting on the packed adjacency (paper Fig. 8b)
         pol = self.policy if self.policy is not None else api.current()[1]
         tm, tw = pol.block_m, pol.block_w
         ap = bitops.pack_a(adj, 1)[0]
         ap = bitops.pad_to(bitops.pad_to(ap, 0, tm), 1, tw)
         occ = tile_occupancy(ap, tm, tw)
-        st = occupancy_stats(occ)
+        idx, counts = compact_tiles(occ)
+        return TileEntry(adj=adj, inv_deg=inv_deg, a_packed=ap,
+                         occupancy=occ, compact_idx=idx,
+                         compact_counts=counts,
+                         occ_stats=occupancy_stats(occ))
+
+    def _execute(self, batch: SubgraphBatch, key: str):
+        """Transfer + forward one batch; returns (logits, tile entry)."""
+        # fingerprint-affinity placement: repeats of the same subgraph
+        # group always land on the same replica (its cache has the tiles);
+        # distinct traffic spreads uniformly over the fleet
+        dev_idx = int(key[:8], 16) % len(self._devices)
+        device = self._devices[dev_idx]
+        cache_key = (key, dev_idx)
+        if batch.features.shape[1] != self.cfg.in_dim:
+            raise ValueError(
+                f"batch feature dim {batch.features.shape[1]} != model "
+                f"in_dim {self.cfg.in_dim}; the jitted unpack would "
+                f"silently truncate")
+        nb = compound_nbytes(batch, nbits=self.feat_bits)
+        entry = self.cache.get(cache_key) if self.cache is not None else None
+        if entry is None:
+            # miss: full §4.6 compound transfer (header|edges|features),
+            # then build + cache the adjacency artifacts
+            adj, packed, meta = transfer_packed(batch, nbits=self.feat_bits,
+                                                device=device)
+            entry = self._build_entry(adj)
+            if self.cache is not None:
+                self.cache.put(cache_key, entry)
+                self.stats.cache_misses += 1  # no cache => no miss to count
+            self.stats.transfer_bytes += nb["III_packed"]
+        else:
+            # hit: adjacency artifacts are device-resident; ship features
+            # only (the smaller feats-only compound buffer)
+            packed, meta = transfer_packed_feats(batch, nbits=self.feat_bits,
+                                                 device=device)
+            self.stats.transfer_bytes += nb["III_feats"]
+            self.stats.cache_hits += 1
+        logits = self._fwd(self._params_for(device), entry.adj, packed,
+                           jnp.float32(meta["scale"]),
+                           jnp.float32(meta["zero"]), entry.inv_deg)
+        return logits, entry
+
+    def _account(self, batch: SubgraphBatch, entry: TileEntry,
+                 elapsed_s: float) -> None:
+        st = entry.occ_stats
         self.stats.tiles_total += st["tiles_total"]
         self.stats.tiles_nonzero += st["tiles_nonzero"]
         self.stats.batches += 1
         self.stats.nodes += batch.n_valid
-        self.stats.wall_s += time.time() - t0
-        return np.asarray(jnp.argmax(logits[: batch.n_valid], axis=-1))
+        self.stats.wall_s += elapsed_s
+        self.stats.batch_latencies_s.append(elapsed_s)

@@ -41,6 +41,24 @@ def test_fake_quant_ste_gradient():
     assert float(jnp.mean(g)) > 0.9
 
 
+def test_fake_quant_ste_gradient_clip_boundary():
+    """Gradient must stop exactly where quantize() starts clipping.
+
+    With nbits=2, scale=1, zero=0 the representable bins are {0,1,2,3}:
+    floor(x) is clipped for x < 0 and for x >= 4 (floor gives 4 = 2**nbits).
+    The old inclusive gate (x <= zero + scale*2**nbits) leaked gradient
+    through x == 4.0, one full bin above the top representable value.
+    """
+    qp = QuantParams(nbits=2, scale=jnp.float32(1.0), zero=jnp.float32(0.0))
+    xs = jnp.asarray([-0.5, 0.0, 1.5, 3.0, 3.75, 4.0, 4.5], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, 2, qp)))(xs)
+    np.testing.assert_array_equal(
+        np.asarray(g), np.asarray([0., 1., 1., 1., 1., 0., 0.], np.float32))
+    # and the forward really does clip at those points
+    y = fake_quant(xs, 2, qp)
+    np.testing.assert_array_equal(np.asarray(y)[-2:], [3.0, 3.0])
+
+
 @given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
 def test_affine_correction_recovers_float_matmul(s, t, seed):
     rng = np.random.default_rng(seed)
