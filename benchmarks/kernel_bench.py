@@ -1,0 +1,118 @@
+"""Kernel + serving micro-benchmarks -> machine-readable perf records.
+
+Sweeps the bit-serial GEMM stack over (op, bits, sparsity, jump mode) and
+the GNN serving forward over jump modes. Every jump arm is asserted
+bit-identical to its dense arm as it is timed, so a smoke run doubles as a
+parity gate (CI runs ``benchmarks/run.py --smoke`` and fails on any
+divergence). ``benchmarks/run.py`` collects the records into
+``BENCH_kernels.json`` at the repo root so the perf trajectory is tracked
+across PRs.
+
+Record schema (one dict per timed configuration):
+  op         — bgemm | bitserial_gemm | bitserial_fused | serve_forward
+  bits       — operand bitwidth (feature bits for serve_forward)
+  sparsity   — zeroed fraction of A's reduction dim (tile-aligned band),
+               or the measured zero-tile skip ratio for serve_forward
+  jump       — none | mask | compact
+  median_ms  — kernel median wall ms (serve: median batch latency)
+  nodes_per_s — serving throughput (serve_forward records only)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import bitops, zerotile
+from repro.kernels import ops as kops
+
+
+def _banded(rng, m, k, bits, sparsity):
+    """s-bit operand with a leading zero band covering ``sparsity`` of K.
+
+    A contiguous band is tile-aligned under any block split, so the zeroed
+    fraction translates directly into skippable tiles.
+    """
+    a = rng.integers(1, 1 << bits, (m, k)).astype(np.int32)
+    z = int(k * sparsity)
+    if z:
+        a[:, :z] = 0
+    return a
+
+
+def bench_gemms(smoke: bool = False) -> list[dict]:
+    """(op, bits, sparsity, jump) sweep with built-in parity assertions.
+
+    The ``compact`` arm consumes PREcomputed tiles with the true max count
+    (the eager / serving contract) — under jit the in-call compact grid
+    cannot shrink below the static KT bound, so this is the arm that shows
+    the actual zero-tile payoff.
+    """
+    m, k, n = (24, 256, 16) if smoke else (64, 2048, 64)
+    iters = 2 if smoke else 5
+    from repro.api.policy import DEFAULT_POLICY
+    bm, bw = DEFAULT_POLICY.block_m, DEFAULT_POLICY.block_w
+    records: list[dict] = []
+    rng = np.random.default_rng(0)
+    for op in ("bgemm", "bitserial_gemm", "bitserial_fused"):
+        bit_sweep = (1,) if op == "bgemm" else ((2,) if smoke else (2, 4))
+        for bits in bit_sweep:
+            for sparsity in (0.0, 0.5, 0.9):
+                a = _banded(rng, m, k, bits, sparsity)
+                b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+                ap = bitops.pack_a(jnp.asarray(a), bits)
+                bp = bitops.pack_b(jnp.asarray(b), bits)
+                alpha = jnp.full((m, 1), 0.01, jnp.float32)
+                beta = jnp.zeros((1, n), jnp.float32)
+                tiles = zerotile.compact_artifacts(ap, bm, bw)
+
+                def run(jump):
+                    kw = ({"tiles": tiles} if jump == "compact"
+                          else {"jump": jump})
+                    if op == "bgemm":
+                        return kops.bgemm(ap[0], bp[0], **kw)
+                    if op == "bitserial_gemm":
+                        return kops.bitserial_gemm(ap, bp, **kw)
+                    return kops.bitserial_fused(ap, bp, alpha, beta,
+                                                out_bits=4, **kw)
+
+                ref = np.asarray(run("none"))
+                for jump in ("none", "mask", "compact"):
+                    np.testing.assert_array_equal(
+                        np.asarray(run(jump)), ref,
+                        err_msg=f"jump parity: {op} {bits}b "
+                                f"sparsity={sparsity} {jump}")
+                    ms = timeit(run, jump, iters=iters) * 1e3
+                    records.append({
+                        "op": op, "bits": bits, "sparsity": sparsity,
+                        "jump": jump, "median_ms": round(ms, 3),
+                        "m": m, "k": k, "n": n,
+                    })
+                    emit(f"kernel_{op}_{bits}b_z{sparsity}_{jump}",
+                         round(ms, 3), "ms", skipped_frac=sparsity)
+    return records
+
+
+def bench_serve(smoke: bool = False) -> list[dict]:
+    """Serving forward under jump=none vs jump=compact (cached tiles).
+
+    Delegates to the single dense-vs-compact serving runner,
+    ``benchmarks.serve_throughput.jump_arm`` (pallas both arms, warm-up
+    excluded from the timed window AND the latency percentiles, logits
+    asserted bit-identical) — one harness, two consumers.
+    """
+    from benchmarks.serve_throughput import jump_arm
+
+    if smoke:
+        return jump_arm(scale=0.004, parts_k=4, rounds=2)
+    return jump_arm(scale=0.01, parts_k=8, rounds=4)
+
+
+def main(smoke: bool = False) -> list[dict]:
+    records = bench_gemms(smoke=smoke)
+    records += bench_serve(smoke=smoke)
+    return records
+
+
+if __name__ == "__main__":
+    main()

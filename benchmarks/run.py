@@ -1,12 +1,25 @@
-"""Run every paper-table benchmark. CSV: name,value,unit,tag,extras."""
+"""Run the benchmark suites. CSV on stdout: name,value,unit,tag,extras.
+
+Always runs the kernel/serving perf sweep (benchmarks/kernel_bench.py) and
+writes its records to ``BENCH_kernels.json`` at the repo root — the
+machine-readable perf trajectory tracked across PRs. The paper-figure
+suites run only in full mode.
+
+  python benchmarks/run.py            # figures + full kernel sweep
+  python benchmarks/run.py --smoke    # tiny shapes, parity-gated (CI)
+  python benchmarks/run.py --kernels-only   # skip the figure suites
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 import traceback
 
 from benchmarks import (fig7_speedup, fig8a_lowbit_gemm, fig8b_zerotile,
                         fig8c_adjsize, fig9a_reuse, fig9b_transfer,
-                        table2_accuracy)
+                        kernel_bench, table2_accuracy)
 
 SUITES = [
     ("fig7", fig7_speedup.main),
@@ -18,9 +31,34 @@ SUITES = [
     ("table2", table2_accuracy.main),
 ]
 
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 
-def main() -> None:
+# every record must carry these; serve_forward records add nodes_per_s
+REQUIRED_KEYS = ("op", "bits", "sparsity", "jump", "median_ms")
+
+
+def write_bench_json(records: list[dict], smoke: bool) -> None:
+    for r in records:
+        missing = [k for k in REQUIRED_KEYS if k not in r]
+        assert not missing, f"BENCH record missing {missing}: {r}"
+        if r["op"] == "serve_forward":
+            assert "nodes_per_s" in r, f"serve record lacks nodes_per_s: {r}"
+    BENCH_PATH.write_text(json.dumps(
+        {"schema": 1, "smoke": smoke, "records": records}, indent=1) + "\n")
+    print(f"# wrote {BENCH_PATH} ({len(records)} records)", flush=True)
+
+
+def main(smoke: bool = False, kernels_only: bool = False) -> None:
     print("name,value,unit,tag,extras")
+    t0 = time.time()
+    print("# --- kernel_bench ---", flush=True)
+    # NOT exception-guarded: a parity failure here must fail the run (CI
+    # smoke gate), unlike the reporting-only figure suites below
+    records = kernel_bench.main(smoke=smoke)
+    write_bench_json(records, smoke)
+    print(f"# kernel_bench took {time.time() - t0:.1f}s", flush=True)
+    if smoke or kernels_only:
+        return
     for name, fn in SUITES:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
@@ -32,4 +70,10 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + parity gate only (CI)")
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="full kernel sweep, skip the figure suites")
+    args = ap.parse_args()
+    main(smoke=args.smoke, kernels_only=args.kernels_only)

@@ -66,23 +66,38 @@ def shim_backend(impl: str | None, backend, caller: str):
 
 # ------------------------------------------------------------- dispatchers
 
-def bitserial_mm(aq, bq, s: int, t: int, *, backend=None, policy=None):
+def _jump_kw(be, tiles):
+    """Precomputed-tile pass-through, gated on the probed capability.
+
+    Backends without ``bitserial_jump`` never see the kwarg (jumping is an
+    optimization — results are identical either way), so their overrides
+    need not accept it.
+    """
+    return {"tiles": tiles} if (
+        tiles is not None and be.supports("bitserial_jump")) else {}
+
+
+def bitserial_mm(aq, bq, s: int, t: int, *, backend=None, policy=None,
+                 tiles=None):
     """Exact int32 (M,K)@(K,N) over unpacked unsigned s-bit x t-bit operands."""
     be, pol = resolve("bitserial_mm", backend=backend, policy=policy, s=s, t=t)
-    return be.bitserial_mm_vals(aq, bq, s, t, policy=pol)
+    return be.bitserial_mm_vals(aq, bq, s, t, policy=pol,
+                                **_jump_kw(be, tiles))
 
 
-def bitserial_mm_packed(a_packed, b_packed, *, backend=None, policy=None):
+def bitserial_mm_packed(a_packed, b_packed, *, backend=None, policy=None,
+                        tiles=None):
     """Exact int32 GEMM over packed (s,M,W) x (t,W,N) bit-plane operands."""
     s, t = a_packed.shape[0], b_packed.shape[0]
     be, pol = resolve("bitserial_mm", backend=backend, policy=policy, s=s, t=t)
-    return be.bitserial_mm(a_packed, b_packed, policy=pol)
+    return be.bitserial_mm(a_packed, b_packed, policy=pol,
+                           **_jump_kw(be, tiles))
 
 
-def bgemm(a_packed, b_packed, *, backend=None, policy=None):
+def bgemm(a_packed, b_packed, *, backend=None, policy=None, tiles=None):
     """1-bit (M,W) x (W,N) packed GEMM -> int32 (zero-tile jump per policy)."""
     be, pol = resolve("bgemm", backend=backend, policy=policy)
-    return be.bgemm(a_packed, b_packed, policy=pol)
+    return be.bgemm(a_packed, b_packed, policy=pol, **_jump_kw(be, tiles))
 
 
 def bitpack(x, scale, zero, *, nbits: int, backend=None, policy=None):
@@ -100,13 +115,15 @@ def wq_mm(x, wq, *, out_dtype=jnp.bfloat16, backend=None, policy=None):
 
 
 def bitserial_fused(a_packed, b_packed, alpha, beta, *, out_bits: int,
-                    relu: bool = True, backend=None, policy=None):
+                    relu: bool = True, backend=None, policy=None,
+                    tiles=None):
     """Packed GEMM with the fused rescale+requantize epilogue (§4.5)."""
     s, t = a_packed.shape[0], b_packed.shape[0]
     be, pol = resolve("bitserial_fused", backend=backend, policy=policy,
                       s=s, t=t)
     return be.bitserial_fused(a_packed, b_packed, alpha, beta,
-                              out_bits=out_bits, relu=relu, policy=pol)
+                              out_bits=out_bits, relu=relu, policy=pol,
+                              **_jump_kw(be, tiles))
 
 
 def __getattr__(name):

@@ -8,6 +8,12 @@ packed bit-plane layouts (bitops.pack_a / pack_b conventions):
   bitpack         — (M,K) f32 -> quantize + pack -> (nbits, M, ceil(K/32))
   wq_mm           — float x WeightQ weight-only matmul (LM decode path)
   bitserial_fused — bitserial_mm with the §4.5 rescale+requantize epilogue
+  bitserial_jump  — capability FLAG (no method): the bit-serial ops can
+                    consume precomputed zero-tile artifacts (``tiles=`` /
+                    ``occupancy=``) and exploit ``policy.jump``. Dispatch
+                    probes it and silently drops the artifacts for backends
+                    without it — jumping is an optimization, never a
+                    semantic change.
 
 Support is PROBED, not assumed: the registry asks ``supports()`` (bitwidths,
 jump modes, interpret fall-back) before dispatching, and falls back to the
@@ -19,7 +25,8 @@ import abc
 
 __all__ = ["Backend", "UnsupportedOpError", "OPS"]
 
-OPS = ("bitserial_mm", "bgemm", "bitpack", "wq_mm", "bitserial_fused")
+OPS = ("bitserial_mm", "bgemm", "bitpack", "wq_mm", "bitserial_fused",
+       "bitserial_jump")
 
 
 class UnsupportedOpError(NotImplementedError):
@@ -57,21 +64,27 @@ class Backend(abc.ABC):
     # ---------------------------------------------------------------- ops
     # Packed-operand canonical forms. ``policy`` is always an
     # ExecutionPolicy; backends read only the fields they understand.
+    # ``tiles=(idx, counts, s_max)`` carries precomputed zero-tile compact
+    # artifacts for the A operand (see repro.core.zerotile); backends
+    # without the ``bitserial_jump`` capability never receive it (dispatch
+    # strips it), so overrides may omit the kwarg entirely.
 
-    def bitserial_mm(self, a_packed, b_packed, *, policy):
+    def bitserial_mm(self, a_packed, b_packed, *, policy, tiles=None):
         """(s,M,W) x (t,W,N) uint32 -> exact int32 (M,N)."""
         raise UnsupportedOpError(f"{self.name} does not provide bitserial_mm")
 
-    def bitserial_mm_vals(self, aq, bq, s: int, t: int, *, policy):
+    def bitserial_mm_vals(self, aq, bq, s: int, t: int, *, policy,
+                          tiles=None):
         """Unpacked int32 operands (M,K) x (K,N); default packs then runs
         the packed path. Backends with a faster direct route override."""
         from repro.core import bitops
 
+        kw = {"tiles": tiles} if tiles is not None else {}
         out = self.bitserial_mm(
-            bitops.pack_a(aq, s), bitops.pack_b(bq, t), policy=policy)
+            bitops.pack_a(aq, s), bitops.pack_b(bq, t), policy=policy, **kw)
         return out[: aq.shape[0], : bq.shape[1]]
 
-    def bgemm(self, a_packed, b_packed, *, policy):
+    def bgemm(self, a_packed, b_packed, *, policy, tiles=None):
         """(M,W) x (W,N) uint32 1-bit GEMM -> int32 (M,N)."""
         raise UnsupportedOpError(f"{self.name} does not provide bgemm")
 
@@ -84,7 +97,7 @@ class Backend(abc.ABC):
         raise UnsupportedOpError(f"{self.name} does not provide wq_mm")
 
     def bitserial_fused(self, a_packed, b_packed, alpha, beta, *,
-                        out_bits: int, relu: bool, policy):
+                        out_bits: int, relu: bool, policy, tiles=None):
         """bitserial_mm + fused alpha*acc+beta -> (relu) -> requantize."""
         raise UnsupportedOpError(f"{self.name} does not provide bitserial_fused")
 

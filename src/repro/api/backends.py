@@ -114,29 +114,33 @@ class PopcountBackend(Backend):
 
 class PallasBackend(Backend):
     name = "pallas"
-    capabilities = _CORE_OPS
+    capabilities = _CORE_OPS | {"bitserial_jump"}
     jump_modes = frozenset({"none", "mask", "compact"})
     interpret_fallback = True
 
-    def bitserial_mm(self, a_packed, b_packed, *, policy):
+    def bitserial_mm(self, a_packed, b_packed, *, policy, tiles=None):
         from repro.kernels import ops as kops
 
         if not policy.reuse and a_packed.shape[0] * b_packed.shape[0] > 1:
             # §4.4 ablation: one 1-bit kernel pass per plane pair — A tiles
             # re-loaded O(s*t) times instead of once (the fig9a baseline).
+            # Tiles are the plane-OR compact set, so they are valid (if
+            # slightly conservative) for every individual plane.
             m, n = a_packed.shape[1], b_packed.shape[2]
             acc = jnp.zeros((m, n), jnp.int32)
             for i in range(a_packed.shape[0]):
                 for j in range(b_packed.shape[0]):
                     acc = acc + (kops.bgemm(a_packed[i], b_packed[j],
-                                            policy=policy) << (i + j))
+                                            policy=policy,
+                                            tiles=tiles) << (i + j))
             return acc
-        return kops.bitserial_gemm(a_packed, b_packed, policy=policy)
+        return kops.bitserial_gemm(a_packed, b_packed, policy=policy,
+                                   tiles=tiles)
 
-    def bgemm(self, a_packed, b_packed, *, policy):
+    def bgemm(self, a_packed, b_packed, *, policy, tiles=None):
         from repro.kernels import ops as kops
 
-        return kops.bgemm(a_packed, b_packed, policy=policy)
+        return kops.bgemm(a_packed, b_packed, policy=policy, tiles=tiles)
 
     def bitpack(self, x, scale, zero, *, nbits, policy):
         from repro.core import bitops
@@ -147,12 +151,12 @@ class PallasBackend(Backend):
         return out[:, :, :words]
 
     def bitserial_fused(self, a_packed, b_packed, alpha, beta, *,
-                        out_bits, relu, policy):
+                        out_bits, relu, policy, tiles=None):
         from repro.kernels import ops as kops
 
         return kops.bitserial_fused(a_packed, b_packed, alpha, beta,
                                     out_bits=out_bits, relu=relu,
-                                    policy=policy)
+                                    policy=policy, tiles=tiles)
 
 
 register(XlaDotBackend())

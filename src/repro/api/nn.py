@@ -70,15 +70,21 @@ def qlinear(xq, qpx: QuantParams, wq, qpw: QuantParams, *, bias=None,
 
 
 def qgraph_conv(adj_bin, hq, qph: QuantParams, inv_deg, *, backend=None,
-                policy=None):
+                policy=None, tiles=None):
     """Â h with Â = (D+I)^-1 (A+I) over quantized features (Algorithm 1).
 
     adj_bin (N, N) 0/1 int32 (no self loops); hq (N, D) unsigned
     qph.nbits ints; inv_deg (N, 1). The 1-bit x s-bit integer GEMM computes
     exact neighbor sums of hq; the epilogue dequantizes, adds self, scales.
+
+    ``tiles=(idx, counts, s_max)`` are precomputed zero-tile compact
+    artifacts for the adjacency (repro.core.zerotile over the packed,
+    tile-padded bit-plane — the serve cache holds exactly these); a
+    jump-capable backend then skips zero adjacency tiles without any
+    per-call occupancy analysis.
     """
     cnt = api.bitserial_mm(adj_bin, hq, 1, qph.nbits,
-                           backend=backend, policy=policy)
+                           backend=backend, policy=policy, tiles=tiles)
     deg = jnp.sum(adj_bin, axis=1, keepdims=True).astype(jnp.float32)
     # dequant: sum_j h_j = scale * sum_j hq_j + deg * zero
     hf = hq.astype(jnp.float32) * qph.scale + qph.zero

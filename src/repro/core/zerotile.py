@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["tile_occupancy", "compact_tiles", "occupancy_stats"]
+__all__ = ["tile_occupancy", "tile_occupancy_planes", "compact_tiles",
+           "compact_artifacts", "occupancy_stats"]
 
 
 def tile_occupancy(a_packed_plane: jax.Array, tile_m: int, tile_w: int) -> jax.Array:
@@ -33,6 +34,18 @@ def tile_occupancy(a_packed_plane: jax.Array, tile_m: int, tile_w: int) -> jax.A
     return (ored != 0).astype(jnp.int32)
 
 
+def tile_occupancy_planes(a_packed: jax.Array, tile_m: int, tile_w: int) -> jax.Array:
+    """(s, M, W) packed bit-planes -> (M/tile_m, W/tile_w) int32 0/1.
+
+    A tile is occupied iff any word of ANY plane is non-zero: a tile that is
+    zero across all s planes contributes nothing to the bit-serial sum, so
+    skipping it is exact for any bitwidth. For the GNN aggregation A is the
+    1-bit adjacency (s == 1) and this reduces to ``tile_occupancy``.
+    """
+    plane = jax.lax.reduce(a_packed, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+    return tile_occupancy(plane, tile_m, tile_w)
+
+
 def compact_tiles(occ: jax.Array):
     """Occupancy (MT, KT) -> (indices (MT, max_nnz) int32, counts (MT,) int32).
 
@@ -47,6 +60,26 @@ def compact_tiles(occ: jax.Array):
     counts = jnp.sum(occ, axis=1).astype(jnp.int32)
     idx = jnp.where(jnp.arange(kt)[None, :] < counts[:, None], order, 0)
     return idx.astype(jnp.int32), counts
+
+
+def compact_artifacts(a_packed: jax.Array, tile_m: int, tile_w: int):
+    """Eager one-step recipe for the kernels' ``tiles=`` contract.
+
+    Pads a packed (M, W) plane or (s, M, W) plane stack to the tile grid,
+    reduces occupancy, compacts, and syncs the max count to a HOST int —
+    returns exactly the ``(idx, counts, s_max)`` triple
+    ``kernels.ops.{bgemm,bitserial_gemm,bitserial_fused}(tiles=...)`` and
+    the serve cache consume. Eager only: the host sync makes it unusable
+    under jit (use ``jump="compact"`` there instead).
+    """
+    from repro.core.bitops import pad_to
+
+    if a_packed.ndim == 2:
+        a_packed = a_packed[None]
+    ap = pad_to(pad_to(a_packed, 1, tile_m), 2, tile_w)
+    occ = tile_occupancy_planes(ap, tile_m, tile_w)
+    idx, counts = compact_tiles(occ)
+    return idx, counts, int(jnp.max(counts))
 
 
 def occupancy_stats(occ: jax.Array) -> dict:

@@ -20,6 +20,9 @@ Zero-tile jumping (paper §4.3), two TPU modes:
   compact — the K grid dimension is sized to the max non-zero tile count and
             a prefetched index array remaps BlockSpec index_maps, so zero
             tiles are neither loaded nor computed (true jumping).
+
+All variants accumulate in a VMEM scratch buffer and write each output
+block once on the last K step (no HBM round-trip between K steps).
 """
 from __future__ import annotations
 
@@ -57,38 +60,51 @@ def _tile_product(a, b, mode: str):
     raise ValueError(f"unknown mode {mode!r}")
 
 
-def _kernel_plain(a_ref, b_ref, o_ref, *, mode):
+def _kernel_plain(a_ref, b_ref, o_ref, acc_ref, *, mode, kt):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+    acc_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+    @pl.when(k == kt - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
 
 
-def _kernel_mask(occ_ref, a_ref, b_ref, o_ref, *, mode):
+def _kernel_mask(occ_ref, a_ref, b_ref, o_ref, acc_ref, *, mode, kt):
     i, k = pl.program_id(0), pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     @pl.when(occ_ref[i, k] != 0)
     def _compute():
-        o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+        acc_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+    @pl.when(k == kt - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
 
 
-def _kernel_compact(idx_ref, cnt_ref, a_ref, b_ref, o_ref, *, mode):
+def _kernel_compact(idx_ref, cnt_ref, a_ref, b_ref, o_ref, acc_ref, *, mode,
+                    s_max):
     i, s = pl.program_id(0), pl.program_id(2)
 
     @pl.when(s == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     @pl.when(s < cnt_ref[i])
     def _compute():
-        o_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+        acc_ref[...] += _tile_product(a_ref[...], b_ref[...], mode)
+
+    @pl.when(s == s_max - 1)
+    def _write():
+        o_ref[...] = acc_ref[...]
 
 
 def bgemm(
@@ -116,9 +132,18 @@ def bgemm(
     mt, nt, kt = m // block_m, n // block_n, w // block_w
     out_shape = jax.ShapeDtypeStruct((m, n), jnp.int32)
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, k, *_: (i, j))
+    # VMEM scratch accumulator: the int32 partial sums never round-trip
+    # through the HBM-blocked o_ref; each block is written once at the end
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
 
     if compact is not None:
         idx, cnt, s_max = compact
+        # all-zero A collapses max(counts) to 0; a 0-sized grid dim would
+        # leave the output uninitialized, so keep one (guarded, no-op) step
+        s_max = max(int(s_max), 1)
+        assert s_max <= kt, (s_max, kt)
+        assert idx.shape[0] == mt and idx.shape[1] >= s_max and \
+            cnt.shape == (mt,), (idx.shape, cnt.shape, mt, s_max)
         a_spec = pl.BlockSpec((block_m, block_w), lambda i, j, s, idx_r, cnt_r: (i, idx_r[i, s]))
         b_spec = pl.BlockSpec((block_w, block_n), lambda i, j, s, idx_r, cnt_r: (idx_r[i, s], j))
         grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -126,30 +151,34 @@ def bgemm(
             grid=(mt, nt, s_max),
             in_specs=[a_spec, b_spec],
             out_specs=o_spec,
+            scratch_shapes=scratch,
         )
-        kern = functools.partial(_kernel_compact, mode=mode)
+        kern = functools.partial(_kernel_compact, mode=mode, s_max=s_max)
         return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
                               interpret=interpret)(idx, cnt, a_packed, b_packed)
 
     a_spec = pl.BlockSpec((block_m, block_w), lambda i, j, k, *_: (i, k))
     b_spec = pl.BlockSpec((block_w, block_n), lambda i, j, k, *_: (k, j))
     if occupancy is not None:
+        assert occupancy.shape == (mt, kt), (occupancy.shape, mt, kt)
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(mt, nt, kt),
             in_specs=[a_spec, b_spec],
             out_specs=o_spec,
+            scratch_shapes=scratch,
         )
-        kern = functools.partial(_kernel_mask, mode=mode)
+        kern = functools.partial(_kernel_mask, mode=mode, kt=kt)
         return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
                               interpret=interpret)(occupancy, a_packed, b_packed)
 
-    kern = functools.partial(_kernel_plain, mode=mode)
+    kern = functools.partial(_kernel_plain, mode=mode, kt=kt)
     return pl.pallas_call(
         kern,
         grid=(mt, nt, kt),
         in_specs=[a_spec, b_spec],
         out_specs=o_spec,
         out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(a_packed, b_packed)

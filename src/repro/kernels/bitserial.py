@@ -8,6 +8,21 @@ given (m, k) grid step the A tile words are DMA'd into VMEM once and the
 loop over the s*t bit-plane pairs happens *inside* the kernel body, so tile
 loads are O(1) in the bitwidth instead of O(s*t).
 
+Zero-tile jumping (paper §4.3) applies to the multi-bit kernels exactly as
+it does to 1-bit ``bgemm``: occupancy is computed on the OR of A's bit
+planes (for GNN aggregation A is the 1-bit adjacency), so a skipped tile is
+zero in every plane and contributes nothing for any bitwidth.
+
+  mask    — per-tile occupancy via scalar-prefetch SMEM; all-zero tiles
+            skip the s*t plane products (pl.when) but their DMA still lands.
+  compact — the K grid dimension is sized to the max non-zero tile count and
+            a prefetched index array remaps the A AND B BlockSpec index_maps,
+            so zero tiles are neither loaded nor computed (true DMA jumping).
+
+All variants accumulate into a VMEM scratch buffer and write the output
+block once on the last K step — the int32 accumulator never round-trips
+through the HBM-blocked ``o_ref`` between K steps.
+
 ``bitserial_fused`` adds the §4.5 inter-layer epilogue: on the last K step
 the int32 accumulator is rescaled (alpha per-row — e.g. 1/degree for GNN
 aggregation — and beta per-column, e.g. folded BatchNorm), ReLU'd, and
@@ -42,18 +57,22 @@ def _plane_accumulate(a_ref, b_ref, mode):
     return acc
 
 
-def _kernel(a_ref, b_ref, o_ref, *, mode):
-    k = pl.program_id(2)
+def _store(acc_ref, o_ref, alpha_ref, beta_ref, *, out_bits, relu):
+    """Write the accumulated block; fused §4.5 epilogue when alpha given."""
+    if alpha_ref is None:
+        o_ref[...] = acc_ref[...]
+        return
+    y = acc_ref[...].astype(jnp.float32) * alpha_ref[...] + beta_ref[...]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    q = jnp.clip(jnp.floor(y), 0.0, float((1 << out_bits) - 1))
+    o_ref[...] = q.astype(jnp.int32)
 
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
 
-    o_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
-
-
-def _kernel_fused(a_ref, b_ref, alpha_ref, beta_ref, o_ref, acc_ref, *, mode,
-                  out_bits, relu, kt):
+def _kernel(a_ref, b_ref, *rest, mode, kt, out_bits=0, relu=False):
+    """Plain (dense) schedule; rest = (alpha?, beta?, o_ref, acc_ref)."""
+    alpha_ref, beta_ref = (rest[0], rest[1]) if len(rest) == 4 else (None, None)
+    o_ref, acc_ref = rest[-2], rest[-1]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -63,12 +82,132 @@ def _kernel_fused(a_ref, b_ref, alpha_ref, beta_ref, o_ref, acc_ref, *, mode,
     acc_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
 
     @pl.when(k == kt - 1)
-    def _epilogue():
-        y = acc_ref[...].astype(jnp.float32) * alpha_ref[...] + beta_ref[...]
-        if relu:
-            y = jnp.maximum(y, 0.0)
-        q = jnp.clip(jnp.floor(y), 0.0, float((1 << out_bits) - 1))
-        o_ref[...] = q.astype(jnp.int32)
+    def _write():
+        _store(acc_ref, o_ref, alpha_ref, beta_ref, out_bits=out_bits,
+               relu=relu)
+
+
+def _kernel_mask(occ_ref, a_ref, b_ref, *rest, mode, kt, out_bits=0,
+                 relu=False):
+    """Mask jumping: zero tiles skip the plane products, not the DMA."""
+    alpha_ref, beta_ref = (rest[0], rest[1]) if len(rest) == 4 else (None, None)
+    o_ref, acc_ref = rest[-2], rest[-1]
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[i, k] != 0)
+    def _compute():
+        acc_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
+
+    @pl.when(k == kt - 1)
+    def _write():
+        _store(acc_ref, o_ref, alpha_ref, beta_ref, out_bits=out_bits,
+               relu=relu)
+
+
+def _kernel_compact(idx_ref, cnt_ref, a_ref, b_ref, *rest, mode, s_max,
+                    out_bits=0, relu=False):
+    """Compact jumping: the grid's K dim only visits non-zero tiles."""
+    alpha_ref, beta_ref = (rest[0], rest[1]) if len(rest) == 4 else (None, None)
+    o_ref, acc_ref = rest[-2], rest[-1]
+    i, s = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < cnt_ref[i])
+    def _compute():
+        acc_ref[...] += _plane_accumulate(a_ref, b_ref, mode)
+
+    @pl.when(s == s_max - 1)
+    def _write():
+        _store(acc_ref, o_ref, alpha_ref, beta_ref, out_bits=out_bits,
+               relu=relu)
+
+
+def _pallas_bitserial(a_packed, b_packed, alpha, beta, *, block_m, block_n,
+                      block_w, mode, occupancy, compact, interpret,
+                      out_bits, relu):
+    """Shared pallas_call builder for the plain and fused entry points.
+
+    ``alpha``/``beta`` None selects the raw-int32 output; otherwise the §4.5
+    epilogue is fused into the final-K-step store.
+    """
+    s, m, w = a_packed.shape
+    t, w2, n = b_packed.shape
+    assert w == w2, (a_packed.shape, b_packed.shape)
+    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0, (
+        m, n, w, block_m, block_n, block_w)
+    mt, nt, kt = m // block_m, n // block_n, w // block_w
+
+    fused = alpha is not None
+    if fused:
+        assert alpha.shape == (m, 1) and beta.shape == (1, n)
+    operands = ([a_packed, b_packed, alpha, beta] if fused
+                else [a_packed, b_packed])
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.int32)
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+    epi = dict(out_bits=out_bits, relu=relu)
+
+    def specs(index_map):
+        sp = [
+            pl.BlockSpec((s, block_m, block_w),
+                         lambda i, j, k, *pre: (0, i, index_map(i, k, *pre))),
+            pl.BlockSpec((t, block_w, block_n),
+                         lambda i, j, k, *pre: (0, index_map(i, k, *pre), j)),
+        ]
+        if fused:
+            sp += [pl.BlockSpec((block_m, 1), lambda i, j, k, *pre: (i, 0)),
+                   pl.BlockSpec((1, block_n), lambda i, j, k, *pre: (0, j))]
+        return sp
+
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, k, *pre: (i, j))
+
+    if compact is not None:
+        idx, cnt, s_max = compact
+        s_max = max(int(s_max), 1)  # all-zero A: one guarded (no-op) step
+        assert s_max <= kt, (s_max, kt)
+        assert idx.shape[0] == mt and idx.shape[1] >= s_max and \
+            cnt.shape == (mt,), (idx.shape, cnt.shape, mt, s_max)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(mt, nt, s_max),
+            in_specs=specs(lambda i, k, idx_r, cnt_r: idx_r[i, k]),
+            out_specs=o_spec,
+            scratch_shapes=scratch,
+        )
+        kern = functools.partial(_kernel_compact, mode=mode, s_max=s_max,
+                                 **epi)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(idx, cnt, *operands)
+
+    if occupancy is not None:
+        assert occupancy.shape == (mt, kt), (occupancy.shape, mt, kt)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(mt, nt, kt),
+            in_specs=specs(lambda i, k, occ_r: k),
+            out_specs=o_spec,
+            scratch_shapes=scratch,
+        )
+        kern = functools.partial(_kernel_mask, mode=mode, kt=kt, **epi)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(occupancy, *operands)
+
+    kern = functools.partial(_kernel, mode=mode, kt=kt, **epi)
+    return pl.pallas_call(
+        kern,
+        grid=(mt, nt, kt),
+        in_specs=specs(lambda i, k: k),
+        out_specs=o_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
 
 
 def bitserial_gemm(
@@ -79,24 +218,20 @@ def bitserial_gemm(
     block_n: int = DEFAULT_BLOCK_N,
     block_w: int = DEFAULT_BLOCK_W,
     mode: str = "vpu",
+    occupancy: jax.Array | None = None,
+    compact: tuple[jax.Array, jax.Array, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    s, m, w = a_packed.shape
-    t, w2, n = b_packed.shape
-    assert w == w2
-    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0
-    mt, nt, kt = m // block_m, n // block_n, w // block_w
-    return pl.pallas_call(
-        functools.partial(_kernel, mode=mode),
-        grid=(mt, nt, kt),
-        in_specs=[
-            pl.BlockSpec((s, block_m, block_w), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((t, block_w, block_n), lambda i, j, k: (0, k, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        interpret=interpret,
-    )(a_packed, b_packed)
+    """Any-bitwidth GEMM. Shapes pre-padded to block multiples (ops.py pads).
+
+    occupancy: (MT, KT) int32 0/1 -> mask-mode jumping.
+    compact: (idx (MT, >=S), cnt (MT,), S) -> compact-mode jumping; S is the
+    static K-grid size (max non-zero tile count; clamped to >= 1).
+    """
+    return _pallas_bitserial(a_packed, b_packed, None, None, block_m=block_m,
+                             block_n=block_n, block_w=block_w, mode=mode,
+                             occupancy=occupancy, compact=compact,
+                             interpret=interpret, out_bits=0, relu=False)
 
 
 def bitserial_fused(
@@ -111,25 +246,18 @@ def bitserial_fused(
     block_n: int = DEFAULT_BLOCK_N,
     block_w: int = DEFAULT_BLOCK_W,
     mode: str = "vpu",
+    occupancy: jax.Array | None = None,
+    compact: tuple[jax.Array, jax.Array, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    s, m, w = a_packed.shape
-    t, w2, n = b_packed.shape
-    assert w == w2 and alpha.shape == (m, 1) and beta.shape == (1, n)
-    assert m % block_m == 0 and n % block_n == 0 and w % block_w == 0
-    mt, nt, kt = m // block_m, n // block_n, w // block_w
-    return pl.pallas_call(
-        functools.partial(_kernel_fused, mode=mode, out_bits=out_bits,
-                          relu=relu, kt=kt),
-        grid=(mt, nt, kt),
-        in_specs=[
-            pl.BlockSpec((s, block_m, block_w), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((t, block_w, block_n), lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        interpret=interpret,
-    )(a_packed, b_packed, alpha, beta)
+    """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5).
+
+    Takes the same ``occupancy``/``compact`` jumping artifacts as
+    ``bitserial_gemm``; the epilogue runs on the last grid step regardless
+    of how many tiles were skipped.
+    """
+    return _pallas_bitserial(a_packed, b_packed, alpha, beta, block_m=block_m,
+                             block_n=block_n, block_w=block_w, mode=mode,
+                             occupancy=occupancy, compact=compact,
+                             interpret=interpret, out_bits=out_bits,
+                             relu=relu)

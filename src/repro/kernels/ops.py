@@ -48,17 +48,36 @@ def _pad2(x, bm, bw, axes=(0, 1)):
     return bitops.pad_to(x, axes[1], bw)
 
 
+def _unpack_tiles(tiles):
+    """tiles=(idx, counts, s_max) -> jit-friendly (idx, counts, static int)."""
+    if tiles is None:
+        return None, None, 0
+    idx, cnt, s_max = tiles
+    if not isinstance(s_max, int):
+        raise TypeError(
+            f"tiles s_max must be a host int (it sizes the kernel grid), "
+            f"got {type(s_max).__name__}")
+    return idx, cnt, s_max
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
-                                             "mode", "jump", "interpret"))
-def _bgemm_call(a_packed, b_packed, *, block_m, block_n, block_w, mode,
-                jump, interpret):
+                                             "mode", "jump", "s_max",
+                                             "interpret"))
+def _bgemm_call(a_packed, b_packed, tiles_idx, tiles_cnt, occupancy, *,
+                block_m, block_n, block_w, mode, jump, s_max, interpret):
     m, _ = a_packed.shape
     _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w)
     b = _pad2(b_packed, block_w, block_n)
     kwargs = dict(block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, interpret=interpret)
-    if jump == "mask":
+    if tiles_idx is not None:
+        # precomputed compact artifacts: no per-call occupancy work
+        out = _bgemm.bgemm(a, b, compact=(tiles_idx, tiles_cnt, s_max),
+                           **kwargs)
+    elif occupancy is not None:
+        out = _bgemm.bgemm(a, b, occupancy=occupancy, **kwargs)
+    elif jump == "mask":
         occ = zerotile.tile_occupancy(a, block_m, block_w)
         out = _bgemm.bgemm(a, b, occupancy=occ, **kwargs)
     elif jump == "compact":
@@ -80,24 +99,58 @@ def bgemm(
     block_w: int | None = None,
     mode: str | None = None,
     jump: str | None = None,  # none | mask | compact
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
-    """1-bit GEMM (M,W)x(W,N)->int32 with optional zero-tile jumping."""
+    """1-bit GEMM (M,W)x(W,N)->int32 with optional zero-tile jumping.
+
+    ``tiles``/``occupancy`` supply PREcomputed jump artifacts (e.g. from the
+    serve tile cache) so the jitted call does no occupancy analysis; they
+    take precedence over the ``jump`` mode, which recomputes them in-call.
+    """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, jump=jump, interpret=interpret)
-    return _bgemm_call(a_packed, b_packed, **kw)
+    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    return _bgemm_call(a_packed, b_packed, t_idx, t_cnt, occupancy,
+                       s_max=s_max, **kw)
+
+
+def _bitserial_jump_artifacts(a, tiles_idx, tiles_cnt, occupancy, jump,
+                              block_m, block_w, s_max):
+    """Resolve (occupancy, compact) for a padded (s, M, W) packed operand.
+
+    Precomputed artifacts win over the ``jump`` mode (which recomputes them
+    in-call from the OR of A's bit planes — exact for any bitwidth).
+    """
+    if tiles_idx is not None:
+        return None, (tiles_idx, tiles_cnt, s_max)
+    if occupancy is not None:
+        return occupancy, None
+    if jump == "mask":
+        return zerotile.tile_occupancy_planes(a, block_m, block_w), None
+    if jump == "compact":
+        occ = zerotile.tile_occupancy_planes(a, block_m, block_w)
+        idx, cnt = zerotile.compact_tiles(occ)
+        return None, (idx, cnt, occ.shape[1])
+    return None, None
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
-                                             "mode", "interpret"))
-def _bitserial_gemm_call(a_packed, b_packed, *, block_m, block_n, block_w,
-                         mode, interpret):
+                                             "mode", "jump", "s_max",
+                                             "interpret"))
+def _bitserial_gemm_call(a_packed, b_packed, tiles_idx, tiles_cnt, occupancy,
+                         *, block_m, block_n, block_w, mode, jump, s_max,
+                         interpret):
     _, m, _ = a_packed.shape
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
+    occ, compact = _bitserial_jump_artifacts(
+        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max)
     out = _bitserial.bitserial_gemm(a, b, block_m=block_m, block_n=block_n,
                                     block_w=block_w, mode=mode,
+                                    occupancy=occ, compact=compact,
                                     interpret=interpret)
     return out[:m, :n]
 
@@ -111,29 +164,44 @@ def bitserial_gemm(
     block_n: int | None = None,
     block_w: int | None = None,
     mode: str | None = None,
+    jump: str | None = None,  # none | mask | compact
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
-    """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM."""
+    """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM with zero-tile jumping.
+
+    ``tiles``/``occupancy`` supply precomputed jump artifacts keyed to A's
+    packed-and-padded tile grid (e.g. the serve cache's compact indices);
+    they take precedence over ``jump``, which recomputes them per call.
+    """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
-                  mode=mode, interpret=interpret)
-    return _bitserial_gemm_call(a_packed, b_packed, **kw)
+                  mode=mode, jump=jump, interpret=interpret)
+    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    return _bitserial_gemm_call(a_packed, b_packed, t_idx, t_cnt, occupancy,
+                                s_max=s_max, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("out_bits", "relu", "block_m",
                                              "block_n", "block_w", "mode",
-                                             "interpret"))
-def _bitserial_fused_call(a_packed, b_packed, alpha, beta, *, out_bits, relu,
-                          block_m, block_n, block_w, mode, interpret):
+                                             "jump", "s_max", "interpret"))
+def _bitserial_fused_call(a_packed, b_packed, alpha, beta, tiles_idx,
+                          tiles_cnt, occupancy, *, out_bits, relu,
+                          block_m, block_n, block_w, mode, jump, s_max,
+                          interpret):
     _, m, _ = a_packed.shape
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
     al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
     be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
+    occ, compact = _bitserial_jump_artifacts(
+        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max)
     out = _bitserial.bitserial_fused(a, b, al, be, out_bits=out_bits,
                                      relu=relu, block_m=block_m,
                                      block_n=block_n, block_w=block_w,
-                                     mode=mode, interpret=interpret)
+                                     mode=mode, occupancy=occ,
+                                     compact=compact, interpret=interpret)
     return out[:m, :n]
 
 
@@ -150,13 +218,22 @@ def bitserial_fused(
     block_n: int | None = None,
     block_w: int | None = None,
     mode: str | None = None,
+    jump: str | None = None,  # none | mask | compact
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5)."""
+    """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5).
+
+    Jump artifacts behave exactly as in :func:`bitserial_gemm`; the fused
+    epilogue still runs on the last grid step for every output block.
+    """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
-                  mode=mode, interpret=interpret)
-    return _bitserial_fused_call(a_packed, b_packed, alpha, beta,
-                                 out_bits=out_bits, relu=relu, **kw)
+                  mode=mode, jump=jump, interpret=interpret)
+    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    return _bitserial_fused_call(a_packed, b_packed, alpha, beta, t_idx,
+                                 t_cnt, occupancy, out_bits=out_bits,
+                                 relu=relu, s_max=s_max, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_w",

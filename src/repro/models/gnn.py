@@ -169,6 +169,7 @@ def forward_qgtc(
     *,
     backend=None,
     policy=None,
+    tiles=None,
 ) -> jax.Array:
     """Integer-domain forward (serving path). adj_bin: (N,N) 0/1 int32.
 
@@ -177,7 +178,10 @@ def forward_qgtc(
     fast path where the compound transfer feeds packed integer features
     straight into the first integer GEMM with no dequantize -> requantize
     roundtrip. ``backend``/``policy`` override the active repro.api context
-    for every integer GEMM in the stack.
+    for every integer GEMM in the stack. ``tiles`` are precomputed zero-tile
+    compact artifacts for ``adj_bin`` (see ``api.nn.qgraph_conv``); they
+    reach only the aggregation GEMMs — the feature/weight GEMMs have a
+    different, dense A operand.
     """
     mm = dict(backend=backend, policy=policy)
     hq, qph = qnn.as_quantized(x, cfg.x_bits)
@@ -185,7 +189,7 @@ def forward_qgtc(
         p = qparams[f"layer{l}"]
         last = l == cfg.layers - 1
         if cfg.model == "gin":
-            a = qnn.qgraph_conv(adj_bin, hq, qph, inv_deg, **mm)
+            a = qnn.qgraph_conv(adj_bin, hq, qph, inv_deg, tiles=tiles, **mm)
             hf = hq.astype(jnp.float32) * qph.scale + qph.zero
             a = a + p["eps"] * hf
             aq, qpa = _requant(a, cfg.x_bits)
@@ -198,7 +202,7 @@ def forward_qgtc(
             w, qpw = p["w"]
             u = qnn.qlinear(hq, qph, w, qpw, bias=p["b"], **mm)
             uq, qpu = _requant(u, cfg.x_bits)
-            h = qnn.qgraph_conv(adj_bin, uq, qpu, inv_deg, **mm)
+            h = qnn.qgraph_conv(adj_bin, uq, qpu, inv_deg, tiles=tiles, **mm)
         if not last:
             h = jax.nn.relu(h)
             hq, qph = _requant(h, cfg.x_bits)  # §4.5: requantize between layers

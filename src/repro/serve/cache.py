@@ -34,6 +34,8 @@ class TileEntry:
     compact_idx: jax.Array  # (Mt/tm, max_nnz) int32 non-zero k-tile ids
     compact_counts: jax.Array  # (Mt/tm,) int32
     occ_stats: dict        # occupancy_stats() snapshot (host ints)
+    s_max: int = 0         # host int: max(compact_counts) — sizes the
+    #                        compact kernel's K grid without a device sync
 
     def nbytes(self) -> int:
         n = 0

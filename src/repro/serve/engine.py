@@ -145,19 +145,33 @@ class GNNServer:
         self._dev_params: dict = {}
         # One jitted forward for the whole server: unpack the compound
         # features and run the pre-quantized integer path. jax.jit caches
-        # one executable per input-shape set, i.e. per (bucket, device).
+        # one executable per input-shape set, i.e. per (bucket, device) —
+        # plus, when cached compact tiles are consumed, per power-of-two
+        # rounded non-zero-tile count (s_max is static: it sizes the
+        # compact kernel's K grid).
         d_in = cfg.in_dim
         fbits = feat_bits
         be, pol = backend, policy
-
-        def _fwd(qp, adj, packed, scale, zero, inv_deg):
+        def _fwd(qp, adj, packed, scale, zero, inv_deg, t_idx, t_cnt, s_max):
             xq = bitops.bit_compose(
                 bitops.unpack_along_axis(packed, axis=2, size=d_in))
             qpx = QuantParams(nbits=fbits, scale=scale, zero=zero)
+            tiles = (t_idx, t_cnt, s_max) if t_idx is not None else None
+            fwd_pol = pol
+            if tiles is not None:
+                # The cached tiles describe only the adjacency, so the
+                # forward-wide policy drops its jump mode: the aggregation
+                # GEMMs jump through the tiles (which take precedence)
+                # while the dense feature/weight GEMMs skip the pointless
+                # occupancy analysis. Resolve the ambient context policy at
+                # trace time (same lifetime as the jitted executable).
+                fwd_pol = pol if pol is not None else api.current()[1]
+                if fwd_pol.jump != "none":
+                    fwd_pol = fwd_pol.replace(jump="none")
             return gnn.forward_qgtc(qp, adj, (xq, qpx), inv_deg, cfg,
-                                    backend=be, policy=pol)
+                                    backend=be, policy=fwd_pol, tiles=tiles)
 
-        self._fwd = jax.jit(_fwd)
+        self._fwd = jax.jit(_fwd, static_argnames=("s_max",))
 
     # ------------------------------------------------------------- probes
 
@@ -245,7 +259,26 @@ class GNNServer:
         return TileEntry(adj=adj, inv_deg=inv_deg, a_packed=ap,
                          occupancy=occ, compact_idx=idx,
                          compact_counts=counts,
-                         occ_stats=occupancy_stats(occ))
+                         occ_stats=occupancy_stats(occ),
+                         s_max=int(jnp.max(counts)))
+
+    def _jump_tiles(self, entry: TileEntry):
+        """Cached compact tiles for the jitted forward, or (None, None, 0).
+
+        Active when the engine's (backend, policy) pair asks for compact
+        jumping and the backend can exploit it. ``s_max`` is rounded up to
+        the next power of two (clamped to the tile-grid bound) so the jit
+        cache stays small: one executable per (bucket, rounded count), not
+        one per distinct subgraph sparsity.
+        """
+        be = (api.get_backend(self.backend) if self.backend is not None
+              else api.current()[0])
+        pol = self.policy if self.policy is not None else api.current()[1]
+        if pol.jump != "compact" or not be.supports("bitserial_jump"):
+            return None, None, 0
+        kt = entry.compact_idx.shape[1]
+        s_pad = 1 << max(0, entry.s_max - 1).bit_length()
+        return entry.compact_idx, entry.compact_counts, min(s_pad, max(kt, 1))
 
     def _execute(self, batch: SubgraphBatch, key: str):
         """Transfer + forward one batch; returns (logits, tile entry)."""
@@ -279,9 +312,11 @@ class GNNServer:
                                                  device=device)
             self.stats.transfer_bytes += nb["III_feats"]
             self.stats.cache_hits += 1
+        t_idx, t_cnt, s_max = self._jump_tiles(entry)
         logits = self._fwd(self._params_for(device), entry.adj, packed,
                            jnp.float32(meta["scale"]),
-                           jnp.float32(meta["zero"]), entry.inv_deg)
+                           jnp.float32(meta["zero"]), entry.inv_deg,
+                           t_idx, t_cnt, s_max)
         return logits, entry
 
     def _account(self, batch: SubgraphBatch, entry: TileEntry,

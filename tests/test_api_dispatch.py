@@ -163,6 +163,29 @@ def test_supports_probing():
     assert xla.supports("wq_mm")
     assert "compact" in pallas.jump_modes and "compact" not in xla.jump_modes
     assert pallas.interpret_fallback and not xla.interpret_fallback
+    # zero-tile artifact consumption is a probed capability, pallas-only
+    assert pallas.supports("bitserial_jump")
+    assert not xla.supports("bitserial_jump")
+    assert not api.get_backend("popcount").supports("bitserial_jump")
+
+
+def test_tiles_kwarg_gated_on_capability():
+    """Every backend accepts tiles= at the dispatch layer: jump-capable
+    backends consume the artifacts, the rest never see the kwarg — and all
+    return the identical int32 result (jumping is never semantic)."""
+    from repro.core import zerotile
+
+    s, t = 2, 3
+    a, b = _pair(s, t, m=24, k=256, n=10, seed=21)
+    a[:, 64:192] = 0  # make some tiles actually skippable
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    pol = api.DEFAULT_POLICY
+    tiles = zerotile.compact_artifacts(bitops.pack_a(aj, s),
+                                       pol.block_m, pol.block_w)
+    want = a.astype(np.int64) @ b
+    for name in api.list_backends():
+        got = api.bitserial_mm(aj, bj, s, t, backend=name, tiles=tiles)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=name)
 
 
 def test_pallas_no_reuse_schedule_matches():

@@ -87,6 +87,130 @@ def test_bitpack_kernel(nbits, m, k):
         assert not np.asarray(got)[:, :, w:].any()
 
 
+def _sparse_operand(rng, m, k, pattern, bits):
+    """Random s-bit operand with a structured sparsity pattern."""
+    a = rng.integers(0, 1 << bits, (m, k)).astype(np.int32)
+    if pattern == "dense":
+        return a
+    if pattern == "banded":  # zero band across the reduction dim
+        a[:, k // 4: 3 * k // 4] = 0
+        return a
+    if pattern == "zero_rows":  # whole tile-rows of zeros
+        a[: max(m // 2, 1)] = 0
+        return a
+    if pattern == "block_diag":  # the serving batch shape
+        out = np.zeros_like(a)
+        step_m, step_k = max(m // 4, 1), max(k // 4, 1)
+        for i in range(4):
+            out[i * step_m:(i + 1) * step_m, i * step_k:(i + 1) * step_k] = \
+                a[i * step_m:(i + 1) * step_m, i * step_k:(i + 1) * step_k]
+        return out
+    raise ValueError(pattern)
+
+
+@pytest.mark.parametrize("pattern", ["dense", "banded", "zero_rows",
+                                     "block_diag"])
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+@pytest.mark.parametrize("mode", ["vpu", "mxu"])
+def test_bitserial_jump_modes_bit_identical(pattern, bits, mode):
+    """jump in {none, mask, compact} must be bit-identical for the multi-bit
+    kernels across sparsity patterns — jumping is never a semantic change."""
+    rng = np.random.default_rng(hash((pattern, bits, mode)) % (2 ** 31))
+    m, k, n = 24, 320, 18
+    a = _sparse_operand(rng, m, k, pattern, bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    want = np.asarray(kops.bitserial_gemm(ap, bp, mode=mode, jump="none"))
+    np.testing.assert_array_equal(want, a.astype(np.int64) @ b)
+    for jump in ("mask", "compact"):
+        got = kops.bitserial_gemm(ap, bp, mode=mode, jump=jump)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{jump} {pattern} {bits}b")
+
+
+@pytest.mark.parametrize("pattern", ["dense", "banded", "zero_rows"])
+@pytest.mark.parametrize("bits", [1, 3])
+@pytest.mark.parametrize("mode", ["vpu", "mxu"])
+def test_bitserial_fused_jump_modes_bit_identical(pattern, bits, mode):
+    """The fused-epilogue kernel under all jump modes: identical int32."""
+    rng = np.random.default_rng(hash((pattern, bits)) % (2 ** 31))
+    m, k, n = 16, 256, 24
+    a = _sparse_operand(rng, m, k, pattern, bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    alpha = jnp.asarray(rng.random((m, 1)) * 0.01, jnp.float32)
+    beta = jnp.asarray(rng.random((1, n)), jnp.float32)
+    want = np.asarray(kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                           mode=mode, jump="none"))
+    for jump in ("mask", "compact"):
+        got = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                   mode=mode, jump=jump)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{jump} {pattern} {bits}b")
+
+
+@pytest.mark.parametrize("op", ["bgemm", "bitserial", "fused"])
+def test_compact_all_zero_adjacency_regression(op):
+    """max(counts) == 0 must not collapse the compact grid: the output is
+    initialized (to zeros / the epilogue of a zero accumulator), never
+    left as uninitialized memory."""
+    m, k, n = 16, 128, 24
+    a = np.zeros((m, k), np.int32)
+    rng = np.random.default_rng(3)
+    b = rng.integers(0, 4, (k, n)).astype(np.int32)
+    azp = bitops.pack_a(jnp.asarray(a), 2)
+    bp = bitops.pack_b(jnp.asarray(b), 2)
+    from repro.api.policy import DEFAULT_POLICY
+    # precomputed tiles with a true s_max of 0 (the eager serving path)
+    tiles = zerotile.compact_artifacts(azp, DEFAULT_POLICY.block_m,
+                                       DEFAULT_POLICY.block_w)
+    assert tiles[2] == 0
+    if op == "bgemm":
+        got = kops.bgemm(azp[0], bitops.pack_b(jnp.asarray(
+            (b > 0).astype(np.int32)), 1)[0], tiles=tiles)
+        want = np.zeros((m, n), np.int64)
+    elif op == "bitserial":
+        got = kops.bitserial_gemm(azp, bp, tiles=tiles)
+        want = np.zeros((m, n), np.int64)
+    else:
+        alpha = jnp.ones((m, 1), jnp.float32)
+        beta = jnp.full((1, n), 2.0, jnp.float32)
+        got = kops.bitserial_fused(azp, bp, alpha, beta, out_bits=4,
+                                   tiles=tiles)
+        want = np.full((m, n), 2, np.int64)  # epilogue of the zero acc
+    np.testing.assert_array_equal(np.asarray(got), want)
+    # and the in-call jump="compact" path (jit: static KT bound) agrees
+    if op == "bitserial":
+        got2 = kops.bitserial_gemm(azp, bp, jump="compact")
+        np.testing.assert_array_equal(np.asarray(got2), 0)
+
+
+def test_precomputed_tiles_match_in_call_jump():
+    """ops accept serve-cache-style precomputed (idx, counts, s_max) and
+    produce exactly the in-call jump="compact" result."""
+    rng = np.random.default_rng(17)
+    m, k, n, bits = 40, 512, 16, 3
+    a = _sparse_operand(rng, m, k, "block_diag", bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    from repro.api.policy import DEFAULT_POLICY
+    bm, bw = DEFAULT_POLICY.block_m, DEFAULT_POLICY.block_w
+    apad = bitops.pad_to(bitops.pad_to(ap, 1, bm), 2, bw)
+    occ = zerotile.tile_occupancy_planes(apad, bm, bw)
+    idx, cnt, s_max = zerotile.compact_artifacts(ap, bm, bw)
+    assert 0 < s_max < occ.shape[1]  # the pattern actually skips tiles
+    got = kops.bitserial_gemm(ap, bp, tiles=(idx, cnt, s_max))
+    np.testing.assert_array_equal(np.asarray(got), a.astype(np.int64) @ b)
+    got_occ = kops.bitserial_gemm(ap, bp, occupancy=occ)
+    np.testing.assert_array_equal(np.asarray(got_occ),
+                                  a.astype(np.int64) @ b)
+    with pytest.raises(TypeError, match="host int"):
+        kops.bitserial_gemm(ap, bp, tiles=(idx, cnt, jnp.int32(s_max)))
+
+
 def test_zero_tile_occupancy_and_compaction():
     rng = np.random.default_rng(5)
     a = np.zeros((64, 512), np.int32)

@@ -195,6 +195,49 @@ def test_prequantized_bitwidth_mismatch_rescales(setup):
     np.testing.assert_array_equal(np.asarray(lg_pair), np.asarray(lg_float))
 
 
+# ------------------------------------------------- zero-tile jumping serving
+
+def test_serve_compact_tiles_consumed_and_bit_identical(setup, monkeypatch):
+    """With a compact-jump policy on a jump-capable backend, the jitted
+    forward consumes the cached TileEntry.compact_idx/compact_counts: the
+    logits are bit-identical to the dense forward on the same backend, and
+    NO in-call occupancy analysis happens (the recompute helper is never
+    traced) — repeat traffic gets the cached artifacts for free."""
+    from repro import api
+    from repro.core import zerotile
+
+    data, parts, cfg, qparams = setup
+    b = batching.make_batches(data, parts, 2, shuffle=False)[0]
+
+    dense = GNNServer(qparams, cfg, backend="pallas")
+    _, lg_dense = dense.infer_batch(b, return_logits=True)
+
+    calls = {"n": 0}
+    orig = zerotile.tile_occupancy_planes
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(zerotile, "tile_occupancy_planes", counting)
+    pol = api.ExecutionPolicy(jump="compact")
+    srv = GNNServer(qparams, cfg, backend="pallas", policy=pol)
+    _, lg1 = srv.infer_batch(b, return_logits=True)   # miss: builds entry
+    _, lg2 = srv.infer_batch(b, return_logits=True)   # hit: cached tiles
+    assert srv.cache.misses == 1 and srv.cache.hits == 1
+    assert calls["n"] == 0  # tiles consumed, never recomputed in-call
+    np.testing.assert_array_equal(lg1, lg2)
+    np.testing.assert_array_equal(lg1, lg_dense)
+    # the compact grid really was sized below the full tile-grid bound
+    entry = next(iter(srv.cache._entries.values()))
+    t_idx, t_cnt, s_max = srv._jump_tiles(entry)
+    assert t_idx is not None and 0 < s_max <= entry.compact_idx.shape[1]
+    assert entry.s_max <= s_max
+    # and a jump-incapable backend silently serves dense (no tiles)
+    plain = GNNServer(qparams, cfg, policy=pol)  # default backend: xla_dot
+    assert plain._jump_tiles(entry) == (None, None, 0)
+
+
 # -------------------------------------------------------------- serve stats
 
 def test_stats_latency_percentiles_and_throughput(setup):
