@@ -10,12 +10,15 @@ across PRs.
 
 Record schema (one dict per timed configuration):
   op         — bgemm | bitserial_gemm | bitserial_fused | serve_forward
-  bits       — operand bitwidth (feature bits for serve_forward)
+               | serve_overload | serve_shuffled
+  bits       — operand bitwidth (feature bits for the serve_* ops)
   sparsity   — zeroed fraction of A's reduction dim (tile-aligned band),
-               or the measured zero-tile skip ratio for serve_forward
+               or the measured zero-tile skip ratio for the serve_* ops
   jump       — none | mask | compact
   median_ms  — kernel median wall ms (serve: median batch latency)
-  nodes_per_s — serving throughput (serve_forward records only)
+  nodes_per_s — serving throughput (serve_* records)
+  serve_overload adds arm/admitted/shed/req_p95_ms; serve_shuffled adds
+  cache_hit_rate and full/partial hit-batch counts (docs/benchmarks.md)
 """
 from __future__ import annotations
 
@@ -94,18 +97,26 @@ def bench_gemms(smoke: bool = False) -> list[dict]:
 
 
 def bench_serve(smoke: bool = False) -> list[dict]:
-    """Serving forward under jump=none vs jump=compact (cached tiles).
+    """Serving arms: jump parity, overload shedding, shuffled coalescing.
 
-    Delegates to the single dense-vs-compact serving runner,
-    ``benchmarks.serve_throughput.jump_arm`` (pallas both arms, warm-up
-    excluded from the timed window AND the latency percentiles, logits
-    asserted bit-identical) — one harness, two consumers.
+    Delegates to the serving runners in ``benchmarks.serve_throughput``
+    (each asserts its own invariant as it is timed):
+
+      jump_arm     — dense vs compact-tile serving, logits bit-identical
+      overload_arm — bounded queue sheds, p95 below the unbounded arm's
+      shuffled_arm — reshuffled coalescing keeps ≥90% cache hit rate with
+                     logits bit-identical to a scratch build
     """
-    from benchmarks.serve_throughput import jump_arm
+    from benchmarks.serve_throughput import (jump_arm, overload_arm,
+                                             shuffled_arm)
 
     if smoke:
-        return jump_arm(scale=0.004, parts_k=4, rounds=2)
-    return jump_arm(scale=0.01, parts_k=8, rounds=4)
+        return (jump_arm(scale=0.004, parts_k=4, rounds=2)
+                + overload_arm(scale=0.004, parts_k=4, bursts=3)
+                + shuffled_arm(scale=0.004, parts_k=4, rounds=2))
+    return (jump_arm(scale=0.01, parts_k=8, rounds=4)
+            + overload_arm(scale=0.006, parts_k=8, bursts=5)
+            + shuffled_arm(scale=0.006, parts_k=8, rounds=3))
 
 
 def main(smoke: bool = False) -> list[dict]:

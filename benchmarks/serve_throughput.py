@@ -16,6 +16,20 @@ forward consumes the cached ``TileEntry.compact_idx``/``compact_counts``
 misses sit outside the timed window. Logits must be bit-identical and the
 compact arm's nodes/s must not fall below the dense arm's.
 
+Two load-safety arms feed ``BENCH_kernels.json`` through
+``benchmarks/run.py``:
+
+  overload_arm — sustained arrival > service rate through an unbounded
+             queue vs an AdmissionPolicy-bounded one (reject mode). The
+             bounded queue sheds load and keeps p95 queue->result latency
+             bounded; the unbounded queue serves everything, seconds
+             late.
+  shuffled_arm — repeat traffic whose coalescing ORDER is reshuffled
+             every round. Per-subgraph cache keying + offset-shifted
+             composition must keep hitting (≥90% per-key hit rate) with
+             logits bit-identical to a cache-disabled scratch build on
+             the identical traffic.
+
 Reported: nodes/sec, p50/p95 batch latency (timer stopped after device
 sync), compile counts, cache hit rate, transfer bytes. The relative claim
 is the point on CPU (see benchmarks/common.py caveat).
@@ -30,7 +44,8 @@ from benchmarks.common import emit
 from repro import api
 from repro.graph import batching, datasets, partition
 from repro.models import gnn
-from repro.serve import GNNServer, SubgraphRequest
+from repro.perf import report
+from repro.serve import AdmissionPolicy, GNNServer, SubgraphRequest
 from repro.serve.queue import buckets_for, requests_from_partitions
 
 import jax
@@ -153,6 +168,152 @@ def jump_arm(scale: float = 0.006, parts_k: int = 8,
     return records
 
 
+def _setup(name: str, scale: float, parts_k: int, levels: int = 2):
+    key = jax.random.PRNGKey(0)
+    data = datasets.load(name, scale=scale)
+    parts = partition.partition(data.csr, parts_k)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes)
+    qparams = gnn.quantize_params(gnn.init_params(key, cfg), cfg)
+    reqs = requests_from_partitions(data, parts)
+    return cfg, qparams, reqs, buckets_for(reqs, levels=levels)
+
+
+def _fresh(r) -> SubgraphRequest:
+    return SubgraphRequest(edges=r.edges, features=r.features,
+                           n_nodes=r.n_nodes)
+
+
+def overload_arm(scale: float = 0.006, parts_k: int = 8,
+                 bursts: int = 5) -> list[dict]:
+    """Overload (arrival > service): unbounded queue vs bounded+shed.
+
+    Each burst submits the partition set TWICE but only ONE engine step
+    runs between bursts, so arrival outpaces service and the queue grows
+    without bound unless admission control sheds. The bounded arm (depth
+    capped at one round) must shed load AND hold a lower p95
+    queue->result latency than the unbounded arm (whose tail requests
+    wait out the whole backlog); the unbounded arm serves everything,
+    late.
+    """
+    name = "ogbn-arxiv"
+    cfg, qparams, reqs, buckets = _setup(name, scale, parts_k)
+    arms = {
+        "unbounded": None,
+        "bounded": AdmissionPolicy(max_depth=parts_k, on_full="reject"),
+    }
+    records, results = [], {}
+    for tag, admission in arms.items():
+        srv = GNNServer(qparams, cfg, buckets=buckets, admission=admission)
+        for r in reqs:  # warm-up wave: compiles + tile-cache misses
+            srv.submit(_fresh(r))
+        srv.drain()
+        srv.stats.batch_latencies_s.clear()
+        srv.stats.request_latencies_s.clear()
+        n0, t0 = srv.stats.nodes, time.perf_counter()
+        for _ in range(bursts):
+            for _ in range(2):  # arrival: two rounds per burst
+                for r in reqs:
+                    srv.submit(_fresh(r))
+            srv.step()  # service: one batch per burst — overload
+        srv.drain()
+        dt = time.perf_counter() - t0
+        st = srv.stats
+        nps = (st.nodes - n0) / dt
+        rec = {
+            "op": "serve_overload", "bits": srv.feat_bits,
+            "sparsity": round(st.zero_tile_skip_ratio, 4), "jump": "none",
+            "median_ms": round(st.p50_s * 1e3, 3),
+            "nodes_per_s": round(nps, 1), "arm": tag,
+            "admitted": st.requests_admitted, "shed": st.requests_shed,
+            "req_p95_ms": round(
+                1e3 * report.percentile(st.request_latencies_s, 95), 3),
+        }
+        records.append(rec)
+        results[tag] = rec
+        emit(f"serve_{name}_overload_{tag}", rec["req_p95_ms"], "req_p95_ms",
+             shed=rec["shed"], admitted=rec["admitted"],
+             nodes_per_s=rec["nodes_per_s"])
+    bounded, unbounded = results["bounded"], results["unbounded"]
+    assert bounded["shed"] > 0, "bounded queue under overload did not shed"
+    assert unbounded["shed"] == 0
+    assert bounded["req_p95_ms"] < unbounded["req_p95_ms"], (
+        f"admission control did not bound tail latency: bounded p95 "
+        f"{bounded['req_p95_ms']}ms >= unbounded {unbounded['req_p95_ms']}ms")
+    emit(f"serve_{name}_overload_p95_ratio",
+         round(unbounded["req_p95_ms"] / max(bounded["req_p95_ms"], 1e-9), 2),
+         "x", derived=True)
+    return records
+
+
+def shuffled_arm(scale: float = 0.006, parts_k: int = 8, rounds: int = 3,
+                 seed: int = 1) -> list[dict]:
+    """Shuffled coalescing order: per-subgraph composition must keep
+    hitting.
+
+    After a cold wave, every round re-submits the same subgraphs in a
+    fresh random order — so the coalesced GROUPS never repeat, only the
+    member subgraphs do. Per-key hit rate over the shuffled window must
+    be ≥90% (it is 100% here: every member is cached) and the logits must
+    be bit-identical to a cache-disabled server building everything from
+    scratch on the identical traffic. Under the old per-group keying this
+    arm's hit rate was 0%.
+    """
+    name = "ogbn-arxiv"
+    cfg, qparams, reqs, buckets = _setup(name, scale, parts_k)
+    rng = np.random.default_rng(seed)
+    warm = GNNServer(qparams, cfg, buckets=buckets)
+    for r in reqs:  # cold wave: builds the per-subgraph entries
+        warm.submit(_fresh(r))
+    warm.drain()
+    hits0 = warm.cache.hits
+    total0 = warm.cache.hits + warm.cache.misses
+    warm.stats.batch_latencies_s.clear()
+    n0, t_warm = warm.stats.nodes, 0.0
+    mismatches = 0
+    for _ in range(rounds):
+        order = rng.permutation(len(reqs))
+        ref = GNNServer(qparams, cfg, buckets=buckets, cache_entries=0)
+        wids, rids = [], []
+        # warm-server window timed alone: the reference server's
+        # construction, compiles and scratch builds must not deflate the
+        # reported serving throughput
+        t0 = time.perf_counter()
+        for i in order:
+            wids.append(warm.submit(_fresh(reqs[i])))
+        got_w = warm.drain(return_logits=True)
+        t_warm += time.perf_counter() - t0
+        for i in order:
+            rids.append(ref.submit(_fresh(reqs[i])))
+        got_r = ref.drain(return_logits=True)
+        for wid, rid in zip(wids, rids):
+            if not np.array_equal(got_w[wid][1], got_r[rid][1]):
+                mismatches += 1
+    nps = (warm.stats.nodes - n0) / t_warm
+    hit_rate = (warm.cache.hits - hits0) / max(
+        warm.cache.hits + warm.cache.misses - total0, 1)
+    rec = {
+        "op": "serve_shuffled", "bits": warm.feat_bits,
+        "sparsity": round(warm.stats.zero_tile_skip_ratio, 4),
+        "jump": "none", "median_ms": round(warm.stats.p50_s * 1e3, 3),
+        "nodes_per_s": round(nps, 1),
+        "cache_hit_rate": round(hit_rate, 4),
+        "full_hit_batches": warm.cache.full_hits,
+        "partial_hit_batches": warm.cache.partial_hits,
+    }
+    emit(f"serve_{name}_shuffled", rec["cache_hit_rate"], "hit_rate",
+         p50_ms=rec["median_ms"], full_hits=rec["full_hit_batches"],
+         partial_hits=rec["partial_hit_batches"])
+    assert mismatches == 0, (
+        f"{mismatches} requests diverged from the scratch build under "
+        f"shuffled coalescing")
+    assert hit_rate >= 0.9, (
+        f"shuffled-coalescing hit rate {hit_rate:.2%} < 90%: per-subgraph "
+        f"composition is not order-insensitive")
+    return [rec]
+
+
 if __name__ == "__main__":
     main()
     jump_arm()
+    overload_arm()
+    shuffled_arm()

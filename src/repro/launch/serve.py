@@ -106,7 +106,8 @@ def serve_gnn(args) -> dict:
     """Stream repeat subgraph traffic through the continuous GNN engine."""
     from repro.graph import datasets, partition
     from repro.models import gnn
-    from repro.serve import GNNServer, requests_from_partitions
+    from repro.serve import (AdmissionPolicy, GNNServer,
+                             requests_from_partitions)
     from repro.serve.queue import buckets_for
 
     data = datasets.load(args.gnn, scale=args.scale, seed=args.seed)
@@ -118,20 +119,28 @@ def serve_gnn(args) -> dict:
     qparams = gnn.quantize_params(params, cfg)
     reqs = requests_from_partitions(data, parts)
     buckets = buckets_for(reqs, levels=3)
+    admission = None
+    if (args.max_queue_depth or args.max_queued_nodes
+            or args.max_queued_edges):
+        admission = AdmissionPolicy(max_depth=args.max_queue_depth,
+                                    max_nodes=args.max_queued_nodes,
+                                    max_edges=args.max_queued_edges,
+                                    on_full=args.admission)
     mesh = make_local_mesh()
     # data-parallel replicas resolve through the dist "serve" rule table;
     # the engine routes coalesced batches to replicas by fingerprint
     # affinity (repeats hit the replica holding their cached tiles)
     with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         server = GNNServer(qparams, cfg, feat_bits=args.feat_bits,
-                           buckets=buckets, mesh=mesh)
+                           buckets=buckets, mesh=mesh, admission=admission)
         for rnd in range(args.rounds):
             for r in reqs:
                 server.submit(type(r)(edges=r.edges, features=r.features,
                                       n_nodes=r.n_nodes))
             server.drain()
             print(f"[serve-gnn] round {rnd}: compiles={server.n_compiles} "
-                  f"cache_hit_rate={server.cache.hit_rate:.2f}", flush=True)
+                  f"cache_hit_rate={server.cache.hit_rate:.2f} "
+                  f"shed={server.stats.requests_shed}", flush=True)
     summary = server.stats.summary()
     summary["n_compiles"] = server.n_compiles
     summary["replicas"] = len(list(mesh.devices.flat))
@@ -162,6 +171,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--rounds", type=int, default=2,
                     help="GNN traffic rounds (repeats exercise the cache)")
     ap.add_argument("--feat-bits", type=int, default=8)
+    # GNN admission-control knobs (unset = unbounded queue)
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="bound the GNN request queue at N requests")
+    ap.add_argument("--max-queued-nodes", type=int, default=None,
+                    help="bound the queue at N total queued nodes")
+    ap.add_argument("--max-queued-edges", type=int, default=None,
+                    help="bound the queue at N total queued edges")
+    ap.add_argument("--admission", choices=("reject", "block"),
+                    default="reject",
+                    help="at the queue bound: shed with a reason (reject) "
+                         "or backpressure the producer (block)")
     args = ap.parse_args(argv)
     if (args.arch is None) == (args.gnn is None):
         ap.error("pass exactly one of --arch (LM) or --gnn (GNN)")

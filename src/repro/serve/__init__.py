@@ -1,17 +1,21 @@
 """Serving substrate: continuous-batching GNN engine + LM decode engines.
 
   engine.GNNServer   — queue + micro-batcher + tile cache + quantized
-                       fast path (see docs/serve.md)
-  queue              — SubgraphRequest, shape buckets, MicroBatcher
-  cache              — cross-request non-zero tile reuse (§4.4 extended)
+                       fast path + admission control (see docs/serve.md)
+  queue              — SubgraphRequest, shape buckets, MicroBatcher,
+                       AdmissionPolicy (bounded queue / backpressure)
+  cache              — cross-request non-zero tile reuse (§4.4 extended),
+                       per-subgraph entries + compose_entries
 
 The LM decode engine lives in repro.launch.serve (it needs mesh context).
 """
-from repro.serve.cache import TileCache, TileEntry
+from repro.serve.cache import TileCache, TileEntry, compose_entries
 from repro.serve.engine import GNNServer, ServeStats
-from repro.serve.queue import (Bucket, MicroBatcher, SubgraphRequest,
-                               make_buckets, requests_from_partitions)
+from repro.serve.queue import (AdmissionError, AdmissionPolicy, Bucket,
+                               MicroBatcher, SubgraphRequest, make_buckets,
+                               requests_from_partitions)
 
-__all__ = ["GNNServer", "ServeStats", "TileCache", "TileEntry", "Bucket",
-           "MicroBatcher", "SubgraphRequest", "make_buckets",
+__all__ = ["GNNServer", "ServeStats", "TileCache", "TileEntry",
+           "compose_entries", "Bucket", "MicroBatcher", "SubgraphRequest",
+           "AdmissionPolicy", "AdmissionError", "make_buckets",
            "requests_from_partitions"]

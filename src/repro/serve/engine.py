@@ -7,10 +7,21 @@ subsystem:
       block-diagonal batches (§4.1) under a node/edge budget, padded to a
       small fixed set of shape buckets so the jitted integer forward
       compiles once per bucket (serve/queue.py).
+  admission control — the queue is bounded by an ``AdmissionPolicy``
+      (depth / queued nodes / queued edges, optional per-client fair
+      share). At the bound, ``reject`` sheds the submit with a reason
+      (``submit`` returns None; ``ServeStats`` counts sheds by reason)
+      and ``block`` applies backpressure: ``submit`` runs engine steps
+      until the request fits, stashing the produced results for the next
+      ``step``/``drain`` to return.
   tile reuse cache — adjacency artifacts (dense form, packed bit-planes,
-      occupancy maps, compact_tiles indices) are cached by subgraph
-      fingerprint (§4.4 extended across requests, serve/cache.py); a hot
-      subgraph skips pack+occupancy work and ships only its features.
+      occupancy maps, compact_tiles indices) are cached PER SUBGRAPH
+      fingerprint (§4.4 extended across requests, serve/cache.py); the
+      micro-batcher aligns block offsets to the kernel tile footprint so
+      a coalesced batch's artifacts compose from its members' cached
+      entries by offset shifting (``compose_entries``) — a hot subgraph
+      hits in any coalescing order, skips pack+occupancy work, and ships
+      only its features when the whole batch is cached.
   quantized fast path — the §4.6 compound transfer delivers packed integer
       features that feed ``forward_qgtc`` pre-quantized, no
       dequantize -> requantize roundtrip.
@@ -31,6 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 
 import jax
@@ -46,8 +58,9 @@ from repro.graph.packing import (compound_nbytes, transfer_packed,
                                  transfer_packed_feats)
 from repro.models import gnn
 from repro.perf import report
-from repro.serve.cache import TileCache, TileEntry
-from repro.serve.queue import (MicroBatcher, SubgraphRequest,
+from repro.serve.cache import TileCache, TileEntry, compose_entries
+from repro.serve.queue import (AdmissionPolicy, CoalescedBatch, MicroBatcher,
+                               SubgraphRequest, _ceil_to,
                                subgraph_fingerprint)
 
 __all__ = ["GNNServer", "ServeStats"]
@@ -62,14 +75,30 @@ class ServeStats:
     transfer_bytes: int = 0
     tiles_total: int = 0
     tiles_nonzero: int = 0
+    # batch-level cache outcomes: cache_hits = full hits (the batch
+    # shipped features only), cache_misses = compound-buffer batches, of
+    # which cache_partial_hits had SOME members cached (their
+    # pack+occupancy was skipped via composition)
     cache_hits: int = 0
     cache_misses: int = 0
-    # per-batch compute latency (timer stopped AFTER device sync) and
-    # per-request queue->result latency; bounded windows so a long-running
-    # server reports recent percentiles without growing per request
+    cache_partial_hits: int = 0
+    # admission accounting: every submit is admitted or shed (monotone:
+    # requests_admitted + requests_shed == submit calls); shed_reasons
+    # histograms the policy reason strings; submit_blocked counts
+    # backpressure events (block-mode submits that had to run the engine)
+    requests_admitted: int = 0
+    requests_shed: int = 0
+    submit_blocked: int = 0
+    shed_reasons: dict = dataclasses.field(default_factory=dict)
+    # per-batch compute latency (timer stopped AFTER device sync),
+    # per-request queue->result latency, and per-request queue-wait
+    # (submit -> coalesce); bounded windows so a long-running server
+    # reports recent percentiles without growing per request
     batch_latencies_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
     request_latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096))
+    queue_wait_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096))
 
     @property
@@ -101,9 +130,15 @@ class ServeStats:
             "zero_tile_skip_ratio": round(self.zero_tile_skip_ratio, 4),
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
+            "cache_partial_hits": self.cache_partial_hits,
+            "requests_admitted": self.requests_admitted,
+            "requests_shed": self.requests_shed,
+            "submit_blocked": self.submit_blocked,
+            "shed_reasons": dict(self.shed_reasons),
         }
         out.update(report.latency_summary(self.batch_latencies_s, "batch_"))
         out.update(report.latency_summary(self.request_latencies_s, "req_"))
+        out.update(report.latency_summary(self.queue_wait_s, "queue_"))
         return out
 
 
@@ -124,13 +159,16 @@ class GNNServer:
     accounting so reported skip ratios match what the kernel would skip.
     ``cache_entries=0`` disables the tile cache; ``buckets=None`` disables
     shape bucketing (exact padding, the recompile-per-shape baseline).
+    ``admission=`` bounds the queue (see serve/queue.py AdmissionPolicy);
+    None = unbounded (every submit admitted).
     """
 
     def __init__(self, qparams: dict, cfg: gnn.GNNConfig, feat_bits: int = 8,
                  backend=None, policy: api.ExecutionPolicy | None = None,
                  buckets=None, node_budget: int | None = None,
                  edge_budget: int | None = None, tile: int = 128,
-                 cache_entries: int = 64, mesh=None):
+                 cache_entries: int = 64, mesh=None,
+                 admission: AdmissionPolicy | None = None):
         self.qparams = qparams
         self.cfg = cfg
         self.feat_bits = feat_bits
@@ -138,8 +176,40 @@ class GNNServer:
         self.policy = policy  # None = resolve the active context per call
         self.stats = ServeStats()
         self.cache = TileCache(cache_entries) if cache_entries > 0 else None
+        # block offsets aligned to the kernel tile footprint so cached
+        # per-subgraph artifacts compose into any batch by offset shifting
+        pol0 = policy if policy is not None else api.current()[1]
+        self._align = math.lcm(pol0.block_m, 32 * pol0.block_w)
+        self._tile_shape = (pol0.block_m, pol0.block_w)
+        # fail fast: every batch shape the batcher can produce must land
+        # on the composition grid, or compose_entries would raise deep in
+        # serving after requests were already admitted
+        if tile % self._align:
+            raise ValueError(
+                f"tile={tile} is not a multiple of the policy's tile "
+                f"footprint {self._align} (lcm of block_m={pol0.block_m} "
+                f"rows and {32 * pol0.block_w} packed columns); pass "
+                f"tile={self._align}")
+        bad = [b for b in (buckets or ()) if b.n_pad % self._align]
+        if bad:
+            raise ValueError(
+                f"bucket n_pad not a multiple of the policy's tile "
+                f"footprint {self._align}: {bad}; build the ladder with "
+                f"tile={self._align}")
         self.batcher = MicroBatcher(buckets, node_budget=node_budget,
-                                    edge_budget=edge_budget, tile=tile)
+                                    edge_budget=edge_budget, tile=tile,
+                                    align=self._align, admission=admission)
+        self._spill: dict = {}  # results produced by block-mode submits
+        # L2: composed batch entries memoized by (ordered member
+        # fingerprints, n_pad, device). Pure memoization — a composed
+        # entry is a deterministic function of its key, so it never needs
+        # invalidation, only LRU bounding. A REPEATED coalescing order
+        # skips the per-batch composition entirely (the old per-group
+        # fast path); a novel order composes once from the per-subgraph
+        # L1 entries and is memoized for next time.
+        self._composed: collections.OrderedDict = collections.OrderedDict()
+        self._composed_cap = cache_entries  # same envelope as the old
+        #                                     per-group cache it replaces
         self._devices = (list(mesh.devices.flat) if mesh is not None
                          else [None])
         self._dev_params: dict = {}
@@ -183,41 +253,86 @@ class GNNServer:
 
     # ------------------------------------------------- continuous batching
 
-    def submit(self, req: SubgraphRequest) -> int:
-        """Enqueue one subgraph request; returns its id for result lookup."""
+    def submit(self, req: SubgraphRequest) -> int | None:
+        """Enqueue one subgraph request; returns its id for result lookup.
+
+        Under an AdmissionPolicy the submit may not be admitted: in
+        ``reject`` mode an over-limit request is shed (returns None;
+        ``stats.requests_shed``/``shed_reasons`` account it), in ``block``
+        mode the call runs engine steps until the request fits — the
+        produced results are stashed and returned by the next ``step``/
+        ``drain`` (backpressure: the producer pays the wait, not the
+        queue).
+        """
         req.t_enqueue = time.perf_counter()
+        pol = self.batcher.admission
+        reason = self.batcher.admit_reason(req)
+        if reason is not None:
+            if pol.on_full == "reject":
+                self.stats.requests_shed += 1
+                self.stats.shed_reasons[reason] = \
+                    self.stats.shed_reasons.get(reason, 0) + 1
+                return None
+            # block: make forward progress until the request is admissible
+            self.stats.submit_blocked += 1
+            while reason is not None:
+                if not self.batcher:
+                    raise ValueError(
+                        f"request {req.req_id} can never be admitted (empty "
+                        f"queue, still refused): {reason}")
+                self._spill.update(self._step_once())
+                reason = self.batcher.admit_reason(req)
         self.batcher.add(req)
+        self.stats.requests_admitted += 1
         return req.req_id
 
-    def step(self) -> dict[int, np.ndarray]:
-        """Coalesce + run ONE batch off the queue; {req_id: predictions}."""
+    def step(self, return_logits: bool = False) -> dict:
+        """Coalesce + run ONE batch off the queue; {req_id: predictions}.
+
+        Results stashed by block-mode submits are returned first (merged
+        into the dict). With ``return_logits=True`` each value is a
+        ``(predictions, logits)`` tuple for the request's valid nodes.
+        """
+        out = self._spill
+        self._spill = {}
+        out.update(self._step_once())
+        if not return_logits:
+            return {rid: preds for rid, (preds, _) in out.items()}
+        return out
+
+    def _step_once(self) -> dict:
+        """Run one batch; {req_id: (predictions, logits)} (empty if idle)."""
         plan = self.batcher.next_plan()
         if plan is None:
             return {}
         t0 = time.perf_counter()
-        logits, entry = self._execute(plan.batch, plan.fingerprint)
+        for r in plan.requests:
+            if r.t_enqueue is not None:
+                self.stats.queue_wait_s.append(t0 - r.t_enqueue)
+        logits, entry = self._execute_plan(plan)
         logits.block_until_ready()  # latency = compute, not dispatch
         t1 = time.perf_counter()
         self._account(plan.batch, entry, t1 - t0)
         out = {}
         lg = np.asarray(logits)
         for req_id, off, n in plan.spans:
-            out[req_id] = np.argmax(lg[off:off + n], axis=-1)
+            span = lg[off:off + n]
+            out[req_id] = (np.argmax(span, axis=-1), span)
             self.stats.requests += 1
         for r in plan.requests:
             if r.t_enqueue is not None:
                 self.stats.request_latencies_s.append(t1 - r.t_enqueue)
         return out
 
-    def drain(self) -> dict[int, np.ndarray]:
+    def drain(self, return_logits: bool = False) -> dict:
         """Run until the queue is empty; results by req_id.
 
         Results are handed to the caller, never retained by the engine —
         a long-running serve loop must not grow memory per request.
         """
-        out: dict[int, np.ndarray] = {}
-        while self.batcher:
-            out.update(self.step())
+        out: dict = {}
+        while self.batcher or self._spill:
+            out.update(self.step(return_logits=return_logits))
         return out
 
     # ------------------------------------------------------ one-batch path
@@ -250,8 +365,7 @@ class GNNServer:
     def _build_entry(self, adj) -> TileEntry:
         deg = jnp.sum(adj, axis=1, keepdims=True).astype(jnp.float32)
         inv_deg = 1.0 / (deg + 1.0)
-        pol = self.policy if self.policy is not None else api.current()[1]
-        tm, tw = pol.block_m, pol.block_w
+        tm, tw = self._tile_shape
         ap = bitops.pack_a(adj, 1)[0]
         ap = bitops.pad_to(bitops.pad_to(ap, 0, tm), 1, tw)
         occ = tile_occupancy(ap, tm, tw)
@@ -276,6 +390,13 @@ class GNNServer:
         pol = self.policy if self.policy is not None else api.current()[1]
         if pol.jump != "compact" or not be.supports("bitserial_jump"):
             return None, None, 0
+        if (pol.block_m, pol.block_w) != self._tile_shape:
+            # the cached artifacts live on the construction-time tile
+            # grid; an ambient policy with a different grid must not
+            # consume them (the kernel would jump on the wrong tiles).
+            # Jumping is an optimization, never a semantic change — the
+            # forward recomputes occupancy in-call on its own grid.
+            return None, None, 0
         kt = entry.compact_idx.shape[1]
         s_pad = 1 << max(0, entry.s_max - 1).bit_length()
         return entry.compact_idx, entry.compact_counts, min(s_pad, max(kt, 1))
@@ -288,11 +409,7 @@ class GNNServer:
         dev_idx = int(key[:8], 16) % len(self._devices)
         device = self._devices[dev_idx]
         cache_key = (key, dev_idx)
-        if batch.features.shape[1] != self.cfg.in_dim:
-            raise ValueError(
-                f"batch feature dim {batch.features.shape[1]} != model "
-                f"in_dim {self.cfg.in_dim}; the jitted unpack would "
-                f"silently truncate")
+        self._check_feat_dim(batch)
         nb = compound_nbytes(batch, nbits=self.feat_bits)
         entry = self.cache.get(cache_key) if self.cache is not None else None
         if entry is None:
@@ -312,12 +429,80 @@ class GNNServer:
                                                  device=device)
             self.stats.transfer_bytes += nb["III_feats"]
             self.stats.cache_hits += 1
+        return self._forward(device, entry, packed, meta), entry
+
+    def _execute_plan(self, plan: CoalescedBatch):
+        """Transfer + forward one coalesced plan via per-subgraph entries.
+
+        Each member subgraph's tile artifacts are cached under its OWN
+        fingerprint and composed into the batch entry at its aligned
+        offset, so a repeat subgraph hits regardless of the coalescing
+        order. With every member cached the batch ships features only; a
+        partial or full miss ships the compound buffer, and the missing
+        members' artifacts are built from aligned slices of the (already
+        device-resident) batch adjacency — one transfer either way.
+        """
+        batch = plan.batch
+        if self.cache is None:
+            # no cache: the whole-batch scratch build (also the reference
+            # path the composition is asserted bit-identical against)
+            return self._execute(batch, plan.fingerprint)
+        self._check_feat_dim(batch)
+        dev_idx = int(plan.fingerprint[:8], 16) % len(self._devices)
+        device = self._devices[dev_idx]
+        nb = compound_nbytes(batch, nbits=self.feat_bits)
+        keys = [("sub", r.fingerprint, dev_idx) for r in plan.requests]
+        entries = [self.cache.get(k) for k in keys]
+        n_cached = sum(e is not None for e in entries)
+        self.cache.note_batch(n_cached, len(entries))
+        offsets = [off for _, off, _ in plan.spans]
+        l2_key = (tuple(r.fingerprint for r in plan.requests),
+                  batch.n_nodes, dev_idx)
+        if n_cached == len(entries):
+            packed, meta = transfer_packed_feats(batch, nbits=self.feat_bits,
+                                                 device=device)
+            self.stats.transfer_bytes += nb["III_feats"]
+            self.stats.cache_hits += 1
+        else:
+            adj, packed, meta = transfer_packed(batch, nbits=self.feat_bits,
+                                                device=device)
+            self.stats.transfer_bytes += nb["III_packed"]
+            self.stats.cache_misses += 1
+            if n_cached:
+                self.stats.cache_partial_hits += 1
+            for i, (e, key) in enumerate(zip(entries, keys)):
+                if e is not None:
+                    continue
+                off = offsets[i]
+                n_sub = _ceil_to(plan.spans[i][2], self._align)
+                sub_adj = jax.lax.dynamic_slice(adj, (off, off),
+                                                (n_sub, n_sub))
+                entries[i] = self._build_entry(sub_adj)
+                self.cache.put(key, entries[i])
+        entry = self._composed.get(l2_key)
+        if entry is None:
+            tm, tw = self._tile_shape
+            entry = compose_entries(entries, offsets, batch.n_nodes, tm, tw)
+            self._composed[l2_key] = entry
+            while len(self._composed) > self._composed_cap:
+                self._composed.popitem(last=False)
+        else:
+            self._composed.move_to_end(l2_key)
+        return self._forward(device, entry, packed, meta), entry
+
+    def _forward(self, device, entry: TileEntry, packed, meta):
         t_idx, t_cnt, s_max = self._jump_tiles(entry)
-        logits = self._fwd(self._params_for(device), entry.adj, packed,
-                           jnp.float32(meta["scale"]),
-                           jnp.float32(meta["zero"]), entry.inv_deg,
-                           t_idx, t_cnt, s_max)
-        return logits, entry
+        return self._fwd(self._params_for(device), entry.adj, packed,
+                         jnp.float32(meta["scale"]),
+                         jnp.float32(meta["zero"]), entry.inv_deg,
+                         t_idx, t_cnt, s_max)
+
+    def _check_feat_dim(self, batch: SubgraphBatch) -> None:
+        if batch.features.shape[1] != self.cfg.in_dim:
+            raise ValueError(
+                f"batch feature dim {batch.features.shape[1]} != model "
+                f"in_dim {self.cfg.in_dim}; the jitted unpack would "
+                f"silently truncate")
 
     def _account(self, batch: SubgraphBatch, entry: TileEntry,
                  elapsed_s: float) -> None:

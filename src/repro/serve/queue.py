@@ -11,6 +11,21 @@ integer forward compiles once per bucket and a stream of mixed-size
 subgraphs triggers no further recompilation. Without bucketing every
 distinct coalesced size is a fresh XLA compile — on a high-traffic server
 that is the dominant cost, not the GEMMs.
+
+Admission control: an unbounded FIFO under overload trades shed requests
+for unbounded queue-wait — every request is eventually served, seconds
+late. ``AdmissionPolicy`` bounds the queue (depth / queued nodes / queued
+edges, optional per-client fair share) and picks what happens at the
+bound: ``reject`` sheds the request with a reason (the engine accounts
+it), ``block`` makes ``submit`` run the engine until space frees — true
+backpressure on the producer.
+
+Block alignment: ``align=`` rounds each request's node offset up to a
+multiple of the kernel tile footprint (lcm of tile rows and packed-word
+tile columns), so a subgraph's cached packed bit-plane / occupancy /
+compact-tile artifacts can be placed into ANY coalesced batch by pure
+offset shifting (serve/cache.py ``compose_entries``) — the batch
+composition never forces a re-pack.
 """
 from __future__ import annotations
 
@@ -25,7 +40,8 @@ from repro.graph.batching import SubgraphBatch
 
 __all__ = ["subgraph_fingerprint", "SubgraphRequest", "Bucket",
            "make_buckets", "buckets_for", "pick_bucket", "CoalescedBatch",
-           "MicroBatcher", "requests_from_partitions"]
+           "AdmissionPolicy", "AdmissionError", "MicroBatcher",
+           "requests_from_partitions"]
 
 _req_ids = itertools.count()
 
@@ -52,6 +68,8 @@ class SubgraphRequest:
     n_nodes: int
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
     t_enqueue: float | None = None  # stamped by the engine at submit()
+    client_id: str | None = None    # admission fair-share bucket (None =
+    #                                 anonymous, exempt from fair-share)
 
     @property
     def n_edges(self) -> int:
@@ -122,6 +140,63 @@ def pick_bucket(buckets: tuple[Bucket, ...], n: int, e: int) -> Bucket:
         f"must admit under the top bucket's capacity")
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Bounds on the request queue and the behavior at the bound.
+
+    ``None`` caps are unlimited. ``on_full``:
+
+      reject — the over-limit submit is shed with a reason string; the
+               engine counts it (``ServeStats.requests_shed``) and returns
+               ``None`` instead of a request id.
+      block  — ``GNNServer.submit`` runs engine steps until the request
+               fits (backpressure: the producer waits, nothing sheds).
+
+    ``per_client_share`` (0 < share <= 1, requires ``max_depth``) caps any
+    single ``client_id`` at ``ceil(share * max_depth)`` queued requests so
+    one flooding client cannot starve the rest; requests with
+    ``client_id=None`` are exempt.
+    """
+
+    max_depth: int | None = None   # queued requests
+    max_nodes: int | None = None   # sum of queued raw node counts
+    max_edges: int | None = None   # sum of queued edge counts
+    on_full: str = "reject"
+    per_client_share: float | None = None
+
+    def __post_init__(self):
+        if self.on_full not in ("reject", "block"):
+            raise ValueError(
+                f"on_full must be 'reject' or 'block', got {self.on_full!r}")
+        for f in ("max_depth", "max_nodes", "max_edges"):
+            v = getattr(self, f)
+            if v is not None and v <= 0:
+                raise ValueError(f"{f} must be positive or None, got {v}")
+        if self.per_client_share is not None:
+            if not 0 < self.per_client_share <= 1:
+                raise ValueError(f"per_client_share must be in (0, 1], got "
+                                 f"{self.per_client_share}")
+            if self.max_depth is None:
+                raise ValueError(
+                    "per_client_share needs max_depth (the share is a "
+                    "fraction of the queue depth)")
+
+    @property
+    def client_cap(self) -> int | None:
+        """Max queued requests per client_id, or None when unset."""
+        if self.per_client_share is None:
+            return None
+        return max(1, int(np.ceil(self.max_depth * self.per_client_share)))
+
+
+class AdmissionError(ValueError):
+    """Raised by MicroBatcher.add when the admission policy rejects."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
 @dataclasses.dataclass
 class CoalescedBatch:
     """A block-diagonal batch of coalesced requests, padded to a bucket."""
@@ -133,16 +208,16 @@ class CoalescedBatch:
 
     @property
     def fingerprint(self) -> str:
-        """Adjacency-structure key: bucket shape + member fingerprints.
+        """Order-insensitive routing key: the sorted member fingerprints.
 
-        Features are excluded on purpose — a repeat of the same subgraph
-        group with fresh features is exactly the tile-cache hit case.
+        Used for replica affinity, NOT as a cache key — the tile cache
+        keys per-subgraph (serve/cache.py), so only the member SET must
+        be stable across coalescing orders. Features are excluded on
+        purpose: a repeat group with fresh features routes identically.
         """
         h = hashlib.blake2b(digest_size=16)
-        h.update(np.int64(self.batch.n_nodes).tobytes())
-        h.update(np.int64(self.batch.edges.shape[1]).tobytes())
-        for r in self.requests:
-            h.update(r.fingerprint.encode())
+        for fp in sorted(r.fingerprint for r in self.requests):
+            h.update(fp.encode())
         return h.hexdigest()
 
 
@@ -152,13 +227,27 @@ class MicroBatcher:
     ``buckets=None`` disables bucketing (exact tile-multiple padding per
     batch) — the no-bucket baseline the throughput benchmark compares
     against; the budget then comes from ``node_budget``/``edge_budget``.
+
+    ``align=`` rounds each request's node offset (and its budget
+    footprint) up to a multiple of ``align`` so cached per-subgraph tile
+    artifacts compose into the batch by offset shifting alone — the serve
+    engine sets it to lcm(block_m, 32 * block_w) of its execution policy.
+
+    ``admission=`` bounds the queue: :meth:`admit_reason` reports why a
+    request would be refused (None = admitted) and :meth:`add` raises
+    :class:`AdmissionError` at the bound. Blocking behavior lives in the
+    engine (the batcher cannot drain itself).
     """
 
     def __init__(self, buckets: tuple[Bucket, ...] | None = None,
                  node_budget: int | None = None,
-                 edge_budget: int | None = None, tile: int = 128):
+                 edge_budget: int | None = None, tile: int = 128,
+                 align: int | None = None,
+                 admission: AdmissionPolicy | None = None):
         if buckets is not None and not buckets:
             raise ValueError("buckets must be a non-empty tuple or None")
+        if align is not None and align <= 0:
+            raise ValueError(f"align must be positive or None, got {align}")
         self.buckets = buckets
         top = buckets[-1] if buckets else None
         self.node_budget = node_budget or (top.n_pad if top else 4 * tile)
@@ -170,50 +259,117 @@ class MicroBatcher:
                 f"edges) exceeds the top bucket {top}; every admitted "
                 f"batch must fit a bucket")
         self.tile = tile
+        self.align = align
+        self.admission = admission
         self._queue: collections.deque = collections.deque()
+        self._queued_nodes = 0
+        self._queued_edges = 0
+        self._per_client: collections.Counter = collections.Counter()
 
     def __len__(self) -> int:
         return len(self._queue)
 
+    @property
+    def queued_nodes(self) -> int:
+        return self._queued_nodes
+
+    @property
+    def queued_edges(self) -> int:
+        return self._queued_edges
+
+    def _footprint(self, n: int) -> int:
+        """Padded node extent a request occupies in a coalesced batch."""
+        return _ceil_to(n, self.align) if self.align else n
+
+    def admit_reason(self, req: SubgraphRequest) -> str | None:
+        """Why the admission policy would refuse ``req`` now, or None.
+
+        Reason strings are STABLE per policy (no live counters or client
+        ids) — they key the engine's ``shed_reasons`` histogram, which
+        must stay bounded on a long-running server.
+        """
+        pol = self.admission
+        if pol is None:
+            return None
+        if pol.max_depth is not None and len(self._queue) >= pol.max_depth:
+            return f"queue depth at max_depth={pol.max_depth}"
+        if (pol.max_nodes is not None
+                and self._queued_nodes + req.n_nodes > pol.max_nodes):
+            return f"queued nodes would exceed max_nodes={pol.max_nodes}"
+        if (pol.max_edges is not None
+                and self._queued_edges + req.n_edges > pol.max_edges):
+            return f"queued edges would exceed max_edges={pol.max_edges}"
+        cap = pol.client_cap
+        if (cap is not None and req.client_id is not None
+                and self._per_client[req.client_id] >= cap):
+            return (f"client at fair-share cap {cap} "
+                    f"(share={pol.per_client_share} of "
+                    f"max_depth={pol.max_depth})")
+        return None
+
     def add(self, req: SubgraphRequest) -> None:
-        if req.n_nodes > self.node_budget or req.n_edges > self.edge_budget:
+        if (self._footprint(req.n_nodes) > self.node_budget
+                or req.n_edges > self.edge_budget):
             raise ValueError(
                 f"request {req.req_id} ({req.n_nodes} nodes, {req.n_edges} "
                 f"edges) exceeds the batch budget ({self.node_budget} nodes, "
                 f"{self.edge_budget} edges); pre-partition it smaller")
+        reason = self.admit_reason(req)
+        if reason is not None:
+            raise AdmissionError(reason)
         self._queue.append(req)
+        self._queued_nodes += req.n_nodes
+        self._queued_edges += req.n_edges
+        if req.client_id is not None:
+            self._per_client[req.client_id] += 1
+
+    def _popleft(self) -> SubgraphRequest:
+        r = self._queue.popleft()
+        self._queued_nodes -= r.n_nodes
+        self._queued_edges -= r.n_edges
+        if r.client_id is not None:
+            self._per_client[r.client_id] -= 1
+            if self._per_client[r.client_id] <= 0:
+                del self._per_client[r.client_id]
+        return r
 
     def next_plan(self) -> CoalescedBatch | None:
-        """Coalesce the longest FIFO prefix that fits the budget."""
+        """Coalesce the longest FIFO prefix that fits the budget.
+
+        The budget is checked against the ALIGNED node footprint (what the
+        batch actually occupies), so an aligned batch always fits its
+        bucket.
+        """
         if not self._queue:
             return None
-        taken, n_tot, e_tot = [], 0, 0
+        taken, n_aln, e_tot = [], 0, 0
         while self._queue:
             r = self._queue[0]
-            if taken and (n_tot + r.n_nodes > self.node_budget
+            if taken and (n_aln + self._footprint(r.n_nodes) > self.node_budget
                           or e_tot + r.n_edges > self.edge_budget):
                 break
-            taken.append(self._queue.popleft())
-            n_tot += r.n_nodes
+            taken.append(self._popleft())
+            n_aln += self._footprint(r.n_nodes)
             e_tot += r.n_edges
-        return self._coalesce(taken, n_tot, e_tot)
+        return self._coalesce(taken, n_aln, e_tot)
 
-    def _coalesce(self, reqs, n_tot: int, e_tot: int) -> CoalescedBatch:
-        bucket = (pick_bucket(self.buckets, n_tot, e_tot)
+    def _coalesce(self, reqs, n_aln: int, e_tot: int) -> CoalescedBatch:
+        bucket = (pick_bucket(self.buckets, n_aln, e_tot)
                   if self.buckets else None)
-        n_pad = bucket.n_pad if bucket else _ceil_to(n_tot, self.tile)
+        n_pad = bucket.n_pad if bucket else _ceil_to(n_aln, self.tile)
         e_cap = bucket.e_cap if bucket else max(e_tot, 1)
         d = reqs[0].features.shape[1]
         edges = -np.ones((2, e_cap), np.int32)
         feats = np.zeros((n_pad, d), np.float32)
-        spans, off, e_off = [], 0, 0
+        spans, off, e_off, n_tot = [], 0, 0, 0
         for r in reqs:
             e = r.edges
             edges[:, e_off:e_off + e.shape[1]] = e + off  # block-diagonal
             feats[off:off + r.n_nodes] = r.features
             spans.append((r.req_id, off, r.n_nodes))
-            off += r.n_nodes
+            off += self._footprint(r.n_nodes)
             e_off += e.shape[1]
+            n_tot += r.n_nodes
         batch = SubgraphBatch(
             edges=edges, n_nodes=n_pad, n_valid=n_tot, features=feats,
             labels=-np.ones(n_pad, np.int32),

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Execute the fenced ```python blocks in markdown docs (CI docs job).
+
+Documentation code drifts: an API rename or a changed default silently
+invalidates every snippet that mentions it. This runner extracts each
+fenced ``python`` block from the given markdown files and executes the
+blocks of one file in ONE shared namespace, in order (so a later block
+may use names an earlier block defined — docs read top to bottom). A
+failing snippet fails the run with the file and line it came from.
+
+Opting a block out: put ``<!-- docs-smoke: skip -->`` on the line right
+above the fence (blank lines allowed between). Use it only for blocks
+that are intentionally illustrative fragments (elided operands, prod-only
+meshes); everything else must run.
+
+Usage:  PYTHONPATH=src python tools/run_doc_snippets.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+SKIP_MARKER = "<!-- docs-smoke: skip -->"
+
+
+def extract_blocks(text: str) -> list[tuple[int, str, bool]]:
+    """[(1-based first code line, code, skipped)] for each ```python fence."""
+    out = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip().startswith("```python"):
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].strip().startswith("```"):
+                j += 1
+            k = i - 1
+            while k >= 0 and not lines[k].strip():
+                k -= 1
+            skipped = k >= 0 and SKIP_MARKER in lines[k]
+            out.append((start + 1, "\n".join(lines[start:j]), skipped))
+            i = j + 1
+        else:
+            i += 1
+    return out
+
+
+def run_file(path: pathlib.Path) -> tuple[int, int]:
+    """Execute path's snippets in one namespace; (n_run, n_skipped)."""
+    blocks = extract_blocks(path.read_text())
+    ns: dict = {"__name__": f"docsmoke_{path.stem}"}
+    n_run = n_skip = 0
+    for lineno, code, skipped in blocks:
+        if skipped:
+            n_skip += 1
+            continue
+        # compile with a filename that points back into the markdown so a
+        # traceback names the doc, not "<string>"
+        exec(compile(code, f"{path}:{lineno}", "exec"), ns)
+        n_run += 1
+    return n_run, n_skip
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: run_doc_snippets.py FILE.md [FILE.md ...]")
+        return 2
+    failed = False
+    for arg in argv:
+        path = pathlib.Path(arg)
+        if not path.exists():
+            print(f"[docs-smoke] MISSING {path}")
+            failed = True
+            continue
+        try:
+            n_run, n_skip = run_file(path)
+        except Exception:
+            import traceback
+            print(f"[docs-smoke] FAIL {path}")
+            traceback.print_exc()
+            failed = True
+            continue
+        print(f"[docs-smoke] ok {path}: {n_run} snippet(s) executed, "
+              f"{n_skip} skipped")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
