@@ -7,24 +7,18 @@ CPU-container caveat: wall-clock numbers here are CPU-emulation times
 """
 from __future__ import annotations
 
-import time
-
-import jax
+from repro.perf.report import bench_median
 
 __all__ = ["timeit", "emit"]
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
-    """Median wall seconds for fn(*args) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args, **kw))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    """Median wall seconds for fn(*args) with block_until_ready.
+
+    Thin alias over `repro.perf.report.bench_median` — one timing
+    primitive for the figure suites, kernel_bench and the tune sweep.
+    """
+    return bench_median(fn, *args, warmup=warmup, iters=iters, **kw)
 
 
 def emit(name: str, value, unit: str, derived: bool = False, **extra):

@@ -33,18 +33,27 @@ SUITES = [
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 
+# schema 2: top level gains "meta" (host + toolchain + backend-capability
+# provenance, stamped per write) so trajectories are never silently
+# compared across machines; sweep-phase records (repro.launch.sweep
+# --bench-out) carry phase/candidate/policy fields
+BENCH_SCHEMA = 2
+
 # every record must carry these; serve_forward records add nodes_per_s
 REQUIRED_KEYS = ("op", "bits", "sparsity", "jump", "median_ms")
 
 
 def write_bench_json(records: list[dict], smoke: bool) -> None:
+    from repro.tune.table import provenance
+
     for r in records:
         missing = [k for k in REQUIRED_KEYS if k not in r]
         assert not missing, f"BENCH record missing {missing}: {r}"
         if r["op"] == "serve_forward":
             assert "nodes_per_s" in r, f"serve record lacks nodes_per_s: {r}"
     BENCH_PATH.write_text(json.dumps(
-        {"schema": 1, "smoke": smoke, "records": records}, indent=1) + "\n")
+        {"schema": BENCH_SCHEMA, "smoke": smoke, "meta": provenance(),
+         "records": records}, indent=1) + "\n")
     print(f"# wrote {BENCH_PATH} ({len(records)} records)", flush=True)
 
 

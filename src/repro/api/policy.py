@@ -48,6 +48,21 @@ class ExecutionPolicy:
             v = getattr(self, f)
             if not isinstance(v, int) or v <= 0:
                 raise ValueError(f"{f} must be a positive int, got {v!r}")
+        # Pack-width alignment, checked at construction so sweep-generated
+        # candidate grids fail fast with a legible error instead of deep
+        # inside the Pallas kernel builder. Operands are padded to block
+        # multiples by the kernel wrappers, but the blocks themselves must
+        # sit on the packed-word grid: A-tiles are (block_m, block_w)
+        # uint32 words (8 sublanes of 32 K-bits each), B/N runs in
+        # 128-lane units.
+        if self.block_m % 8:
+            raise ValueError(
+                f"block_m must be a multiple of 8 (packed A-tile sublane "
+                f"granularity), got {self.block_m}")
+        if self.block_n % 128:
+            raise ValueError(
+                f"block_n must be a multiple of 128 (lane width of a "
+                f"packed B tile), got {self.block_n}")
 
     def replace(self, **kw) -> "ExecutionPolicy":
         """Functional update (alias for dataclasses.replace)."""

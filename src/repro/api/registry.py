@@ -113,17 +113,55 @@ def current() -> tuple[Backend, ExecutionPolicy]:
     return _REGISTRY[name], pol
 
 
+def _policy_configured() -> bool:
+    """True when SOMEONE chose a policy (use() context or set_default).
+
+    The tuning table may only fill silence: an author's explicit choice —
+    per-call, scoped, or process-wide — always wins. The process default
+    is "configured" exactly when it is no longer the DEFAULT_POLICY
+    object set_default started from (identity, not equality: installing
+    an equal-valued policy is still an explicit choice)."""
+    ctx = _active.get()
+    if ctx is not None and ctx[1] is not None:
+        return True
+    return _default[1] is not DEFAULT_POLICY
+
+
+def _tuned_policy(op: str, *, bits: int,
+                  shape) -> ExecutionPolicy | None:
+    """Active tuning-table policy for this call, or None. Never raises."""
+    try:
+        from repro.tune import table as _table
+    except Exception:  # pragma: no cover - tune ships with the package
+        return None
+    return _table.dispatch_policy(op, bits=bits, shape=shape)
+
+
 def resolve(op: str, *, backend: str | Backend | None = None,
             policy: ExecutionPolicy | None = None,
-            s: int = 1, t: int = 1) -> tuple[Backend, ExecutionPolicy]:
+            s: int = 1, t: int = 1, shape=None,
+            tuned: bool = True) -> tuple[Backend, ExecutionPolicy]:
     """Pick the backend+policy for one op call.
 
     Explicit ``backend=`` pins the engine (raises if it can't run the op);
     otherwise the active context backend is used, falling back across the
     registry in registration order when it lacks the capability.
+
+    Policy fallback chain (docs/tuning.md): explicit ``policy=`` > active
+    ``use()`` context / ``set_default`` > active tuning-table entry
+    (nearest (op, bits, shape) bucket; only when ``tuned`` and no policy
+    was configured anywhere) > DEFAULT_POLICY. ``shape`` is the (m, k, n)
+    hint for the table lookup; dispatchers that carry precomputed tile
+    artifacts pass ``tuned=False`` — the artifacts were built on a
+    specific tile grid, and a table policy must not swap the grid under
+    them.
     """
     cur_be, cur_pol = current()
     pol = policy if policy is not None else cur_pol
+    if policy is None and tuned and not _policy_configured():
+        tpol = _tuned_policy(op, bits=max(s, t), shape=shape)
+        if tpol is not None:
+            pol = tpol
     if backend is not None:
         be = get_backend(backend)
         if not be.supports(op, s=s, t=t):

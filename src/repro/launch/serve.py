@@ -126,13 +126,18 @@ def serve_gnn(args) -> dict:
                                     max_nodes=args.max_queued_nodes,
                                     max_edges=args.max_queued_edges,
                                     on_full=args.admission)
+    # policy source: "auto" = the active repro.tune table (committed
+    # artifact by default), "off" = hand-picked defaults, PATH = a table
+    # emitted by `python -m repro.launch.sweep`
+    table = (None if args.tuning_table == "off" else args.tuning_table)
     mesh = make_local_mesh()
     # data-parallel replicas resolve through the dist "serve" rule table;
     # the engine routes coalesced batches to replicas by fingerprint
     # affinity (repeats hit the replica holding their cached tiles)
     with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         server = GNNServer(qparams, cfg, feat_bits=args.feat_bits,
-                           buckets=buckets, mesh=mesh, admission=admission)
+                           buckets=buckets, mesh=mesh, admission=admission,
+                           tuning_table=table)
         for rnd in range(args.rounds):
             for r in reqs:
                 server.submit(type(r)(edges=r.edges, features=r.features,
@@ -144,6 +149,7 @@ def serve_gnn(args) -> dict:
     summary = server.stats.summary()
     summary["n_compiles"] = server.n_compiles
     summary["replicas"] = len(list(mesh.devices.flat))
+    summary["tuned_policies"] = server.tuned_policies()
     print(f"[serve-gnn] {json.dumps(summary)}", flush=True)
     return summary
 
@@ -182,6 +188,11 @@ def main(argv=None) -> dict:
                     default="reject",
                     help="at the queue bound: shed with a reason (reject) "
                          "or backpressure the producer (block)")
+    ap.add_argument("--tuning-table", default="auto", metavar="PATH",
+                    help="GNN execution-policy source: 'auto' (active "
+                         "repro.tune table, the default), 'off' "
+                         "(hand-picked defaults), or a table file from "
+                         "python -m repro.launch.sweep")
     args = ap.parse_args(argv)
     if (args.arch is None) == (args.gnn is None):
         ap.error("pass exactly one of --arch (LM) or --gnn (GNN)")

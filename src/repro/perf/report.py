@@ -8,9 +8,32 @@ from __future__ import annotations
 import json
 import pathlib
 import sys
+import time
 
-__all__ = ["percentile", "latency_summary", "load", "roofline_table",
-           "dryrun_table"]
+__all__ = ["percentile", "latency_summary", "bench_median", "load",
+           "roofline_table", "dryrun_table"]
+
+
+def bench_median(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
+    """Median wall-clock seconds of ``fn(*args, **kw)`` with device sync.
+
+    The one timing primitive shared by benchmarks/common.timeit and the
+    repro.tune sweep harness: warm-up runs absorb compiles, every timed
+    run blocks until the device finishes, and the median (not mean)
+    resists scheduler noise on a shared CPU. jax is imported lazily so
+    report-rendering stays usable without it.
+    """
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 def percentile(xs, q: float) -> float:

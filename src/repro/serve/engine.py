@@ -62,6 +62,7 @@ from repro.serve.cache import TileCache, TileEntry, compose_entries
 from repro.serve.queue import (AdmissionPolicy, CoalescedBatch, MicroBatcher,
                                SubgraphRequest, _ceil_to,
                                subgraph_fingerprint)
+from repro.tune import table as tune_table
 
 __all__ = ["GNNServer", "ServeStats"]
 
@@ -161,6 +162,17 @@ class GNNServer:
     shape bucketing (exact padding, the recompile-per-shape baseline).
     ``admission=`` bounds the queue (see serve/queue.py AdmissionPolicy);
     None = unbounded (every submit admitted).
+
+    ``tuning_table`` feeds the policy fallback chain when ``policy=None``:
+    each shape bucket resolves its own tuned ``serve_forward`` policy at
+    jit time (one nearest-bucket lookup per ``n_pad``, memoized — the jit
+    cache stays bounded at one executable per bucket). ``"auto"`` (the
+    default) snapshots the active table from ``repro.tune`` at
+    construction (``use_table`` context > ``install()`` > the committed
+    artifact); pass a path or TuningTable to pin one, or None to disable
+    tuning. An explicit ``policy=`` always wins, and an unusable table
+    file warns and degrades to the ambient policy — it never fails
+    construction.
     """
 
     def __init__(self, qparams: dict, cfg: gnn.GNNConfig, feat_bits: int = 8,
@@ -168,17 +180,43 @@ class GNNServer:
                  buckets=None, node_budget: int | None = None,
                  edge_budget: int | None = None, tile: int = 128,
                  cache_entries: int = 64, mesh=None,
-                 admission: AdmissionPolicy | None = None):
+                 admission: AdmissionPolicy | None = None,
+                 tuning_table="auto"):
         self.qparams = qparams
         self.cfg = cfg
         self.feat_bits = feat_bits
         self.backend = backend
-        self.policy = policy  # None = resolve the active context per call
+        self.policy = policy  # None = table entry, else the active context
+        if tuning_table == "auto":
+            self._table = tune_table.active_table()
+        elif tuning_table is None or isinstance(tuning_table,
+                                                tune_table.TuningTable):
+            self._table = tuning_table
+        else:  # a path: corrupt/stale/missing warns and disables tuning
+            self._table = tune_table.TuningTable.load(tuning_table)
+        self._bucket_pols: dict = {}  # n_pad -> tuned policy | None
         self.stats = ServeStats()
         self.cache = TileCache(cache_entries) if cache_entries > 0 else None
         # block offsets aligned to the kernel tile footprint so cached
-        # per-subgraph artifacts compose into any batch by offset shifting
-        pol0 = policy if policy is not None else api.current()[1]
+        # per-subgraph artifacts compose into any batch by offset shifting.
+        # With no explicit policy the table's largest-bucket entry sets the
+        # footprint — but only when its grid divides the batcher tile and
+        # every bucket (a tuned grid must not invalidate the ladder the
+        # caller already built); otherwise the ambient policy's grid holds.
+        pol0 = policy
+        if pol0 is None and self._table is not None:
+            probe = max((b.n_pad for b in (buckets or ())), default=tile)
+            cand = self._table.policy_for(
+                "serve_forward", bits=feat_bits,
+                shape=(probe, probe, cfg.in_dim))
+            if cand is not None:
+                align = math.lcm(cand.block_m, 32 * cand.block_w)
+                if (tile % align == 0
+                        and not any(b.n_pad % align
+                                    for b in (buckets or ()))):
+                    pol0 = cand
+        if pol0 is None:
+            pol0 = api.current()[1]
         self._align = math.lcm(pol0.block_m, 32 * pol0.block_w)
         self._tile_shape = (pol0.block_m, pol0.block_w)
         # fail fast: every batch shape the batcher can produce must land
@@ -218,11 +256,15 @@ class GNNServer:
         # one executable per input-shape set, i.e. per (bucket, device) —
         # plus, when cached compact tiles are consumed, per power-of-two
         # rounded non-zero-tile count (s_max is static: it sizes the
-        # compact kernel's K grid).
+        # compact kernel's K grid). ``pol`` is the per-bucket policy
+        # resolved by _policy_for_n — static, so each bucket compiles with
+        # its tuned policy; None means "resolve the ambient context at
+        # trace time" (the pre-table behavior).
         d_in = cfg.in_dim
         fbits = feat_bits
-        be, pol = backend, policy
-        def _fwd(qp, adj, packed, scale, zero, inv_deg, t_idx, t_cnt, s_max):
+        be = backend
+        def _fwd(qp, adj, packed, scale, zero, inv_deg, t_idx, t_cnt,
+                 s_max, pol):
             xq = bitops.bit_compose(
                 bitops.unpack_along_axis(packed, axis=2, size=d_in))
             qpx = QuantParams(nbits=fbits, scale=scale, zero=zero)
@@ -241,7 +283,7 @@ class GNNServer:
             return gnn.forward_qgtc(qp, adj, (xq, qpx), inv_deg, cfg,
                                     backend=be, policy=fwd_pol, tiles=tiles)
 
-        self._fwd = jax.jit(_fwd, static_argnames=("s_max",))
+        self._fwd = jax.jit(_fwd, static_argnames=("s_max", "pol"))
 
     # ------------------------------------------------------------- probes
 
@@ -376,18 +418,45 @@ class GNNServer:
                          occ_stats=occupancy_stats(occ),
                          s_max=int(jnp.max(counts)))
 
-    def _jump_tiles(self, entry: TileEntry):
+    def _policy_for_n(self, n_pad: int) -> api.ExecutionPolicy | None:
+        """Per-bucket policy: constructor ``policy=`` > tuning table >
+        None (= resolve the ambient context per call, pre-table behavior).
+
+        Table lookups are memoized per ``n_pad`` — deterministic per
+        bucket, so the jitted forward still compiles once per bucket
+        (``n_compiles`` ≤ buckets holds with tuning on).
+        """
+        if self.policy is not None:
+            return self.policy
+        if self._table is None:
+            return None
+        if n_pad not in self._bucket_pols:
+            self._bucket_pols[n_pad] = self._table.policy_for(
+                "serve_forward", bits=self.feat_bits,
+                shape=(n_pad, n_pad, self.cfg.in_dim))
+        return self._bucket_pols[n_pad]
+
+    def tuned_policies(self) -> dict:
+        """{n_pad: policy-field dict | None} resolved so far (probes/CLI)."""
+        from repro.tune.table import policy_to_dict
+        return {n: (policy_to_dict(p) if p is not None else None)
+                for n, p in sorted(self._bucket_pols.items())}
+
+    def _jump_tiles(self, entry: TileEntry, pol=None):
         """Cached compact tiles for the jitted forward, or (None, None, 0).
 
         Active when the engine's (backend, policy) pair asks for compact
-        jumping and the backend can exploit it. ``s_max`` is rounded up to
+        jumping and the backend can exploit it. ``pol=None`` resolves the
+        constructor policy or the ambient context (the per-bucket tuned
+        policy is passed in by ``_forward``). ``s_max`` is rounded up to
         the next power of two (clamped to the tile-grid bound) so the jit
         cache stays small: one executable per (bucket, rounded count), not
         one per distinct subgraph sparsity.
         """
         be = (api.get_backend(self.backend) if self.backend is not None
               else api.current()[0])
-        pol = self.policy if self.policy is not None else api.current()[1]
+        if pol is None:
+            pol = self.policy if self.policy is not None else api.current()[1]
         if pol.jump != "compact" or not be.supports("bitserial_jump"):
             return None, None, 0
         if (pol.block_m, pol.block_w) != self._tile_shape:
@@ -491,11 +560,12 @@ class GNNServer:
         return self._forward(device, entry, packed, meta), entry
 
     def _forward(self, device, entry: TileEntry, packed, meta):
-        t_idx, t_cnt, s_max = self._jump_tiles(entry)
+        pol = self._policy_for_n(entry.adj.shape[0])
+        t_idx, t_cnt, s_max = self._jump_tiles(entry, pol)
         return self._fwd(self._params_for(device), entry.adj, packed,
                          jnp.float32(meta["scale"]),
                          jnp.float32(meta["zero"]), entry.inv_deg,
-                         t_idx, t_cnt, s_max)
+                         t_idx, t_cnt, s_max, pol)
 
     def _check_feat_dim(self, batch: SubgraphBatch) -> None:
         if batch.features.shape[1] != self.cfg.in_dim:

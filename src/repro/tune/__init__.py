@@ -1,0 +1,51 @@
+"""repro.tune — measured policy selection instead of hand-picked constants.
+
+`BENCH_kernels.json` shows the best `ExecutionPolicy` flips with
+(op, bits, sparsity, shape): compact jumping wins at z0.9 and loses on
+dense inputs; tile shapes trade off the same way. This package closes the
+loop:
+
+  sweep.py — declarative sweep harness: a config names a grid over
+             (op, bits, sparsity band, shape, backend, policy candidates);
+             each cell is timed with parity asserted against the dense
+             xla_dot reference AS it is timed (a sweep doubles as an
+             exactness gate), and the winners become table entries.
+  table.py — the persisted, versioned tuning table mapping
+             (op, bits, sparsity_band, shape_bucket) -> ExecutionPolicy
+             with nearest-bucket lookup and provenance metadata (host,
+             jax version, backend capabilities).
+
+Consumption (the documented fallback chain — docs/tuning.md):
+
+  explicit ``policy=``  >  ``repro.api.use(...)`` context / set_default  >
+  tuning table entry    >  ``DEFAULT_POLICY``
+
+`repro.api.resolve` consults the active table only when no policy was
+given anywhere, so tuning can never override an author's choice; and the
+table is advisory — every backend/policy pair returns bit-identical int32
+results (the repo's core invariant), so a stale or missing table changes
+performance, never answers.
+
+``sweep`` is imported lazily: it pulls in jax + the serving stack, while
+``table`` stays import-light so dispatch can consult it cheaply.
+"""
+from __future__ import annotations
+
+from repro.tune.table import (AUTO, SCHEMA_VERSION, TableEntry, TuningTable,
+                              active_table, default_table, dispatch_policy,
+                              install, policy_from_dict, policy_to_dict,
+                              provenance, use_table)
+
+__all__ = [
+    "AUTO", "SCHEMA_VERSION", "TableEntry", "TuningTable",
+    "active_table", "default_table", "dispatch_policy", "install",
+    "policy_from_dict", "policy_to_dict", "provenance", "use_table",
+    "sweep",
+]
+
+
+def __getattr__(name):
+    if name == "sweep":
+        import repro.tune.sweep as sweep
+        return sweep
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

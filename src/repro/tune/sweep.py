@@ -1,0 +1,335 @@
+"""Declarative ExecutionPolicy sweep: measure a grid, persist the winners.
+
+A sweep CONFIG is a plain dict (usually a JSON file — see docs/tuning.md)
+describing a measurement grid:
+
+  name           — stamped into the emitted table's provenance metadata
+  ops            — subset of ("bgemm", "bitserial_mm", "bitserial_fused")
+  bits           — operand bitwidths (bgemm cells run only at 1 bit)
+  sparsity_bands — zeroed fractions of A's reduction dim (tile-aligned
+                   band, kernel_bench-style)
+  shapes         — [m, k, n] shape buckets
+  backend        — backend name the candidates run on (default "pallas")
+  candidates     — list of ExecutionPolicy field-override dicts applied
+                   over DEFAULT_POLICY ({} = the hand-picked default arm)
+  iters/warmup   — timing repeats (median) / warm-up runs per arm
+  serve          — optional serving section (dataset/scale/parts/rounds/
+                   feat_bits/levels/candidates): streams repeat subgraph
+                   traffic through GNNServer per candidate and emits one
+                   "serve_forward" table entry per shape bucket
+
+Every candidate is asserted bit-identical against the dense ``xla_dot``
+reference AS it is timed — a sweep doubles as a cross-backend exactness
+gate, exactly like benchmarks/kernel_bench.py. Invalid candidates (e.g. a
+tile grid ExecutionPolicy rejects) are not errors: they are recorded in
+``SweepResult.rejected`` with the construction-time ValueError message,
+so generated candidate grids get fast, legible rejection.
+
+Timed arms also become BENCH_kernels.json-style trajectory records
+(``phase: "sweep"``) so `repro.launch.sweep --bench-out` can merge the
+measurement history into the tracked perf file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
+from repro.core import bitops, zerotile
+from repro.perf.report import bench_median, percentile
+from repro.tune.table import (TableEntry, TuningTable, policy_to_dict,
+                              provenance)
+
+__all__ = ["KERNEL_OPS", "DEFAULT_CANDIDATES", "SMOKE_CONFIG",
+           "SweepResult", "run_sweep"]
+
+KERNEL_OPS = ("bgemm", "bitserial_mm", "bitserial_fused")
+
+# dispatch-layer op name -> the historical BENCH_kernels.json spelling
+_BENCH_OP = {"bitserial_mm": "bitserial_gemm"}
+
+DEFAULT_CANDIDATES = (
+    {},                              # the hand-picked DEFAULT_POLICY arm
+    {"jump": "mask"},
+    {"jump": "compact"},
+    {"mode": "mxu"},
+    {"block_m": 16, "block_w": 8},
+)
+
+# Tiny grid for `repro.launch.sweep --smoke` (CI): one shape, two bands,
+# three candidates — one of them (block_m=12) deliberately invalid to
+# exercise the legible-rejection path end to end.
+SMOKE_CONFIG = {
+    "name": "smoke",
+    "ops": ["bgemm", "bitserial_mm"],
+    "bits": [1, 2],
+    "sparsity_bands": [0.0, 0.9],
+    "shapes": [[16, 256, 16]],
+    "backend": "pallas",
+    "candidates": [{}, {"jump": "compact"}, {"block_m": 12}],
+    "iters": 2,
+    "warmup": 1,
+    "serve": {
+        "dataset": "ogbn-arxiv", "scale": 0.004, "parts": 4,
+        "rounds": 1, "levels": 2,
+        "candidates": [{}, {"jump": "compact"}],
+    },
+}
+
+
+@dataclasses.dataclass
+class SweepResult:
+    table: TuningTable
+    records: list        # BENCH-style trajectory records (phase: "sweep")
+    rejected: list       # [{candidate, error}] — invalid policy overrides
+
+
+def _banded(rng, m, k, bits, sparsity):
+    """s-bit operand with a leading zero band covering ``sparsity`` of K
+    (tile-aligned under any block split — kernel_bench's generator)."""
+    a = rng.integers(1, 1 << bits, (m, k)).astype(np.int32)
+    z = int(k * sparsity)
+    if z:
+        a[:, :z] = 0
+    return a
+
+
+def _cells(config):
+    for op in config.get("ops", KERNEL_OPS):
+        if op not in KERNEL_OPS:
+            raise ValueError(f"unknown sweep op {op!r} "
+                             f"(expected one of {KERNEL_OPS})")
+        for bits in config.get("bits", (1, 2, 4)):
+            if op == "bgemm" and bits != 1:
+                continue  # bgemm is the 1-bit kernel by definition
+            for band in config.get("sparsity_bands", (0.0, 0.5, 0.9)):
+                for shape in config.get("shapes", ((64, 2048, 64),)):
+                    m, k, n = (int(x) for x in shape)
+                    yield op, int(bits), float(band), (m, k, n)
+
+
+def _candidates(raw, rejected):
+    """Validate policy-override dicts; invalid ones -> rejected, legibly."""
+    out = []
+    for ov in raw:
+        try:
+            pol = DEFAULT_POLICY.replace(**dict(ov))
+        except (TypeError, ValueError) as e:
+            rejected.append({"candidate": dict(ov), "error": str(e)})
+            continue
+        out.append((dict(ov), pol))
+    return out
+
+
+def _cell_runner(op, backend, ap, bp, alpha, beta):
+    """One callable per cell: dispatch with an EXPLICIT backend+policy.
+
+    Explicit policy means `resolve` never consults the active tuning
+    table here — the sweep measures candidates, it must not recurse into
+    its own output.
+    """
+    def run(pol, tiles=None):
+        if op == "bgemm":
+            return api.bgemm(ap[0], bp[0], backend=backend, policy=pol,
+                             tiles=tiles)
+        if op == "bitserial_mm":
+            return api.bitserial_mm_packed(ap, bp, backend=backend,
+                                           policy=pol, tiles=tiles)
+        return api.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                   relu=True, backend=backend, policy=pol,
+                                   tiles=tiles)
+    return run
+
+
+def _sweep_cell(op, bits, band, shape, backend, cands, iters, warmup,
+                rng, log):
+    m, k, n = shape
+    a = _banded(rng, m, k, bits, band)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    alpha = jnp.full((m, 1), 0.01, jnp.float32)
+    beta = jnp.zeros((1, n), jnp.float32)
+    run = _cell_runner(op, backend, ap, bp, alpha, beta)
+    # dense reference on the registration-default engine: parity target
+    ref = np.asarray(_cell_runner(op, "xla_dot", ap, bp, alpha, beta)(
+        DEFAULT_POLICY))
+    tiles_by_grid = {}
+    records, arms = [], []
+    for ov, pol in cands:
+        tiles = None
+        if pol.jump == "compact":
+            grid = (pol.block_m, pol.block_w)
+            if grid not in tiles_by_grid:
+                # precomputed artifacts with the true max count — the
+                # eager/serving contract the compact path is honest under
+                tiles_by_grid[grid] = zerotile.compact_artifacts(ap, *grid)
+            tiles = tiles_by_grid[grid]
+        out = np.asarray(run(pol, tiles))
+        np.testing.assert_array_equal(
+            out, ref, err_msg=(f"sweep parity: {op} {bits}b z{band} "
+                               f"{shape} {backend} candidate {ov}"))
+        ms = bench_median(run, pol, tiles, warmup=warmup, iters=iters) * 1e3
+        rec = {
+            "op": _BENCH_OP.get(op, op), "bits": bits, "sparsity": band,
+            "jump": pol.jump, "median_ms": round(ms, 3),
+            "m": m, "k": k, "n": n, "backend": backend,
+            "phase": "sweep", "candidate": dict(ov),
+            "policy": policy_to_dict(pol),
+        }
+        records.append(rec)
+        arms.append((ms, ov, pol, rec))
+    best_ms, best_ov, best_pol, best_rec = min(arms, key=lambda x: x[0])
+    best_rec["best"] = True
+    baseline = next((ms for ms, ov, _, _ in arms if not ov), None)
+    entry = TableEntry(op=op, bits=bits, sparsity_band=band,
+                       shape_bucket=shape, policy=best_pol, backend=backend,
+                       median_ms=round(best_ms, 3),
+                       baseline_ms=(round(baseline, 3)
+                                    if baseline is not None else None))
+    log(f"[sweep] {op} {bits}b z{band} {shape}: best={best_ov or 'default'} "
+        f"{best_ms:.3f}ms" + (f" (default {baseline:.3f}ms)"
+                              if baseline is not None else ""))
+    return entry, records
+
+
+# ---------------------------------------------------------------- serve arm
+
+def _sweep_serve(scfg, rejected, log):
+    """Stream repeat traffic through GNNServer per candidate; the winner
+    (by nodes/s, logits asserted bit-identical across candidates) becomes
+    one serve_forward entry per shape bucket.
+
+    Candidates must keep DEFAULT_POLICY's tile grid: the bucket ladder,
+    offset alignment and cache composition are all built on it — a
+    grid-changing candidate is rejected legibly, not silently mistuned.
+    """
+    from repro.graph import datasets, partition
+    from repro.models import gnn
+    from repro.serve import GNNServer, SubgraphRequest
+    from repro.serve.queue import buckets_for, requests_from_partitions
+
+    backend = scfg.get("backend", "pallas")
+    feat_bits = int(scfg.get("feat_bits", 8))
+    rounds = int(scfg.get("rounds", 1))
+    data = datasets.load(scfg.get("dataset", "ogbn-arxiv"),
+                         scale=float(scfg.get("scale", 0.004)))
+    parts = partition.partition(data.csr, int(scfg.get("parts", 4)))
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes,
+                                  x_bits=feat_bits, w_bits=feat_bits)
+    qparams = gnn.quantize_params(
+        gnn.init_params(jax.random.PRNGKey(0), cfg), cfg)
+    reqs = requests_from_partitions(data, parts)
+    buckets = buckets_for(reqs, levels=int(scfg.get("levels", 2)))
+
+    default_grid = (DEFAULT_POLICY.block_m, DEFAULT_POLICY.block_n,
+                    DEFAULT_POLICY.block_w)
+    arms, records = [], []
+    ref_logits = None
+    for ov, pol in _candidates(scfg.get("candidates",
+                                        ({}, {"jump": "compact"})),
+                               rejected):
+        if (pol.block_m, pol.block_n, pol.block_w) != default_grid:
+            rejected.append({
+                "candidate": dict(ov),
+                "error": "serve sweep candidates must keep the default "
+                         "tile grid (the bucket ladder and cache "
+                         "composition are built on it)"})
+            continue
+        srv = GNNServer(qparams, cfg, feat_bits=feat_bits, backend=backend,
+                        policy=pol, buckets=buckets, tuning_table=None)
+        for r in reqs:  # warm-up wave: compiles + tile-cache misses
+            srv.submit(SubgraphRequest(edges=r.edges, features=r.features,
+                                       n_nodes=r.n_nodes))
+        srv.drain()
+        srv.stats.batch_latencies_s.clear()
+        n0, t0 = srv.stats.nodes, time.perf_counter()
+        logits = []
+        for _ in range(rounds):
+            ids = [srv.submit(SubgraphRequest(edges=r.edges,
+                                              features=r.features,
+                                              n_nodes=r.n_nodes))
+                   for r in reqs]
+            out = srv.drain(return_logits=True)
+            logits = [out[i][1] for i in ids]
+        dt = time.perf_counter() - t0
+        nps = (srv.stats.nodes - n0) / dt
+        if ref_logits is None:
+            ref_logits = logits
+        else:  # tuning must never change answers — assert as we measure
+            for got, want in zip(logits, ref_logits):
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want),
+                    err_msg=f"serve sweep parity: candidate {ov}")
+        p50_ms = 1e3 * percentile(srv.stats.batch_latencies_s, 50)
+        skip = round(srv.stats.zero_tile_skip_ratio, 4)
+        rec = {
+            "op": "serve_forward", "bits": feat_bits, "sparsity": skip,
+            "jump": pol.jump, "median_ms": round(p50_ms, 3),
+            "nodes_per_s": round(nps, 1), "backend": backend,
+            "phase": "sweep", "candidate": dict(ov),
+            "policy": policy_to_dict(pol),
+        }
+        records.append(rec)
+        arms.append((nps, ov, pol, skip, p50_ms, rec))
+        log(f"[sweep] serve candidate {ov or 'default'}: "
+            f"{nps:.1f} nodes/s, p50 {p50_ms:.3f}ms, skip {skip}")
+    if not arms:
+        return [], records
+    nps, ov, pol, skip, p50_ms, rec = max(arms, key=lambda x: x[0])
+    rec["best"] = True
+    base_p50 = next((a[4] for a in arms if not a[1]), None)
+    entries = [TableEntry(op="serve_forward", bits=feat_bits,
+                          sparsity_band=skip,
+                          shape_bucket=(b.n_pad, b.n_pad, cfg.in_dim),
+                          policy=pol, backend=backend,
+                          median_ms=round(p50_ms, 3),
+                          baseline_ms=(round(base_p50, 3)
+                                       if base_p50 is not None else None))
+               for b in buckets]
+    log(f"[sweep] serve best={ov or 'default'} -> "
+        f"{len(entries)} bucket entries")
+    return entries, records
+
+
+# -------------------------------------------------------------------- driver
+
+def run_sweep(config: dict, *, log=print) -> SweepResult:
+    """Measure the config's grid; returns the table + trajectory records."""
+    rejected: list = []
+    cands = _candidates(config.get("candidates", DEFAULT_CANDIDATES),
+                        rejected)
+    if not cands:
+        raise ValueError(
+            f"no valid policy candidates in config "
+            f"{config.get('name', '?')!r}: {rejected}")
+    backend = config.get("backend", "pallas")
+    iters = int(config.get("iters", 3))
+    warmup = int(config.get("warmup", 1))
+    rng = np.random.default_rng(int(config.get("seed", 0)))
+    entries, records = [], []
+    for op, bits, band, shape in _cells(config):
+        entry, recs = _sweep_cell(op, bits, band, shape, backend, cands,
+                                  iters, warmup, rng, log)
+        entries.append(entry)
+        records.extend(recs)
+    if config.get("serve"):
+        serve_entries, serve_recs = _sweep_serve(config["serve"], rejected,
+                                                 log)
+        entries.extend(serve_entries)
+        records.extend(serve_recs)
+    meta = provenance({
+        "config": config.get("name", "unnamed"),
+        "generated_by": "repro.launch.sweep",
+        "candidates": [dict(ov) for ov, _ in cands],
+    })
+    table = TuningTable(entries, meta=meta)
+    for rej in rejected:
+        log(f"[sweep] rejected candidate {rej['candidate']}: "
+            f"{rej['error']}")
+    return SweepResult(table=table, records=records, rejected=rejected)
