@@ -14,9 +14,12 @@ Record schema (one dict per timed configuration):
   bits       — operand bitwidth (feature bits for the serve_* ops)
   sparsity   — zeroed fraction of A's reduction dim (tile-aligned band),
                or the measured zero-tile skip ratio for the serve_* ops
-  jump       — none | mask | compact
+  jump       — none | mask | compact | sgt
   median_ms  — kernel median wall ms (serve: median batch latency)
   nodes_per_s — serving throughput (serve_* records)
+  pattern    — "scattered" on the SGT-vs-compact cells (bench_sgt): the
+               zero words are spread so every k-tile stays occupied —
+               compact jumping cannot skip, sparse-graph translation can
   serve_overload adds arm/admitted/shed/req_p95_ms; serve_shuffled adds
   cache_hit_rate and full/partial hit-batch counts (docs/benchmarks.md)
 """
@@ -26,8 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro import api
 from repro.core import bitops, zerotile
 from repro.kernels import ops as kops
+from repro.kernels import sgt as sgt_lib
 
 
 def _banded(rng, m, k, bits, sparsity):
@@ -40,6 +45,24 @@ def _banded(rng, m, k, bits, sparsity):
     z = int(k * sparsity)
     if z:
         a[:, :z] = 0
+    return a
+
+
+def _scattered(rng, m, k, bits, sparsity):
+    """s-bit operand whose surviving non-zero WORDS are spread evenly.
+
+    The power-law-adjacency regime: zeroing ``sparsity`` of K in evenly
+    spaced 32-column word groups leaves (almost) every k-tile occupied, so
+    tile-granular compact jumping still DMAs nearly the full matrix while
+    word-granular sparse-graph translation touches only the live words.
+    """
+    a = rng.integers(1, 1 << bits, (m, k)).astype(np.int32)
+    nw = k // 32
+    keep = max(1, round(nw * (1.0 - sparsity)))
+    kept = np.round(np.linspace(0, nw - 1, keep)).astype(int)
+    dead = np.ones(nw, bool)
+    dead[kept] = False
+    a[:, np.repeat(dead, 32)] = 0
     return a
 
 
@@ -96,6 +119,92 @@ def bench_gemms(smoke: bool = False) -> list[dict]:
     return records
 
 
+def bench_sgt(smoke: bool = False) -> list[dict]:
+    """Sparse-graph translation vs compact jumping at scattered sparsity.
+
+    The cell compact jumping cannot win: ``_scattered`` leaves every
+    k-tile occupied, so the compact arm DMAs block_w words per surviving
+    tile while the SGT arm's word-column remap (kernels/sgt.py) DMAs only
+    the live words — same grid steps, ~block_w× less data and compute per
+    step. Both arms consume PREcomputed artifacts (the eager/serving
+    contract) and are asserted bit-identical to the dense ``xla_dot``
+    reference AS they are timed; the full run additionally requires SGT ≥
+    compact per cell (the BENCH_kernels.json acceptance gate) and
+    strictly faster somewhere.
+    """
+    # k must be deep enough that per-step word work dominates dispatch
+    # overhead — at k=256 both arms are ~0.1ms of call overhead and the
+    # gate would measure noise; at k>=1024 the word-work gap shows (2-12x)
+    m, k, n = (24, 1024, 16) if smoke else (64, 2048, 64)
+    iters = 5 if smoke else 7  # medians must shrug off scheduler spikes
+    from repro.api.policy import DEFAULT_POLICY
+    bm, bw = DEFAULT_POLICY.block_m, DEFAULT_POLICY.block_w
+    # parity across the full 1..8 bit range rides on bitserial_gemm; the
+    # other ops add (op, bits) diversity at the paper's serving widths
+    cells = ([("bgemm", 1), ("bitserial_gemm", 1), ("bitserial_gemm", 2),
+              ("bitserial_gemm", 8)] if smoke else
+             [("bgemm", 1)]
+             + [("bitserial_gemm", b) for b in range(1, 9)]
+             + [("bitserial_fused", 2), ("bitserial_fused", 4)])
+    records: list[dict] = []
+    rng = np.random.default_rng(7)
+    wins = 0
+    for op, bits in cells:
+        for sparsity in ((0.9,) if smoke else (0.9, 0.95)):
+            a = _scattered(rng, m, k, bits, sparsity)
+            b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+            ap = bitops.pack_a(jnp.asarray(a), bits)
+            bp = bitops.pack_b(jnp.asarray(b), bits)
+            alpha = jnp.full((m, 1), 0.01, jnp.float32)
+            beta = jnp.zeros((1, n), jnp.float32)
+            arms = {"compact": zerotile.compact_artifacts(ap, bm, bw),
+                    "sgt": sgt_lib.sgt_artifacts(ap, bm)}
+
+            def run(arm, _op=op, _ap=ap, _bp=bp, _arms=arms,
+                    _alpha=alpha, _beta=beta):
+                if arm == "xla":  # dense reference engine, no tiles
+                    if _op == "bgemm":
+                        return api.bgemm(_ap[0], _bp[0], backend="xla_dot")
+                    if _op == "bitserial_gemm":
+                        return api.bitserial_mm_packed(_ap, _bp,
+                                                       backend="xla_dot")
+                    return api.bitserial_fused(_ap, _bp, _alpha, _beta,
+                                               out_bits=4,
+                                               backend="xla_dot")
+                tiles = _arms[arm]
+                if _op == "bgemm":
+                    return kops.bgemm(_ap[0], _bp[0], tiles=tiles)
+                if _op == "bitserial_gemm":
+                    return kops.bitserial_gemm(_ap, _bp, tiles=tiles)
+                return kops.bitserial_fused(_ap, _bp, _alpha, _beta,
+                                            out_bits=4, tiles=tiles)
+
+            ref = np.asarray(run("xla"))  # dense engine: the parity target
+            cell_ms = {}
+            for arm in ("compact", "sgt"):
+                np.testing.assert_array_equal(
+                    np.asarray(run(arm)), ref,
+                    err_msg=f"sgt parity: {op} {bits}b scattered "
+                            f"z{sparsity} {arm} vs xla_dot")
+                ms = timeit(run, arm, iters=iters) * 1e3
+                cell_ms[arm] = ms
+                records.append({
+                    "op": op, "bits": bits, "sparsity": sparsity,
+                    "jump": arm, "median_ms": round(ms, 3),
+                    "m": m, "k": k, "n": n, "pattern": "scattered",
+                })
+                emit(f"sgt_{op}_{bits}b_z{sparsity}_{arm}", round(ms, 3),
+                     "ms", pattern="scattered")
+            margin = 1.25 if smoke else 1.0  # smoke: shared-CI noise
+            assert cell_ms["sgt"] <= cell_ms["compact"] * margin, (
+                f"SGT arm ({cell_ms['sgt']:.3f}ms) lost to compact "
+                f"({cell_ms['compact']:.3f}ms) on its own turf: {op} "
+                f"{bits}b scattered z{sparsity}")
+            wins += cell_ms["sgt"] < cell_ms["compact"]
+    assert wins >= 1, "SGT strictly faster than compact on no cell"
+    return records
+
+
 def bench_serve(smoke: bool = False) -> list[dict]:
     """Serving arms: jump parity, overload shedding, shuffled coalescing.
 
@@ -103,24 +212,29 @@ def bench_serve(smoke: bool = False) -> list[dict]:
     (each asserts its own invariant as it is timed):
 
       jump_arm     — dense vs compact-tile serving, logits bit-identical
+      sgt_arm      — jump="sgt" serving with cached/composed translation
+                     artifacts, logits bit-identical to scratch + dense
       overload_arm — bounded queue sheds, p95 below the unbounded arm's
       shuffled_arm — reshuffled coalescing keeps ≥90% cache hit rate with
                      logits bit-identical to a scratch build
     """
     from benchmarks.serve_throughput import (jump_arm, overload_arm,
-                                             shuffled_arm)
+                                             sgt_arm, shuffled_arm)
 
     if smoke:
         return (jump_arm(scale=0.004, parts_k=4, rounds=2)
+                + sgt_arm(scale=0.004, parts_k=4, rounds=2)
                 + overload_arm(scale=0.004, parts_k=4, bursts=3)
                 + shuffled_arm(scale=0.004, parts_k=4, rounds=2))
     return (jump_arm(scale=0.01, parts_k=8, rounds=4)
+            + sgt_arm(scale=0.01, parts_k=8, rounds=4)
             + overload_arm(scale=0.006, parts_k=8, bursts=5)
             + shuffled_arm(scale=0.006, parts_k=8, rounds=3))
 
 
 def main(smoke: bool = False) -> list[dict]:
     records = bench_gemms(smoke=smoke)
+    records += bench_sgt(smoke=smoke)
     records += bench_serve(smoke=smoke)
     return records
 

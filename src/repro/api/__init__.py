@@ -69,12 +69,17 @@ def shim_backend(impl: str | None, backend, caller: str):
 def _jump_kw(be, tiles):
     """Precomputed-tile pass-through, gated on the probed capability.
 
-    Backends without ``bitserial_jump`` never see the kwarg (jumping is an
-    optimization — results are identical either way), so their overrides
-    need not accept it.
+    Backends without the matching capability never see the kwarg (jumping
+    and translation are optimizations — results are identical either way),
+    so their overrides need not accept it. Compact tiles probe
+    ``bitserial_jump``; the tagged sparse-graph-translation 4-tuple
+    (``sgt.sgt_artifacts``) probes ``bitserial_sgt``.
     """
-    return {"tiles": tiles} if (
-        tiles is not None and be.supports("bitserial_jump")) else {}
+    if tiles is None:
+        return {}
+    cap = ("bitserial_sgt" if len(tiles) == 4 and tiles[3] == "sgt"
+           else "bitserial_jump")
+    return {"tiles": tiles} if be.supports(cap) else {}
 
 
 def bitserial_mm(aq, bq, s: int, t: int, *, backend=None, policy=None,

@@ -14,6 +14,12 @@ packed bit-plane layouts (bitops.pack_a / pack_b conventions):
                     probes it and silently drops the artifacts for backends
                     without it — jumping is an optimization, never a
                     semantic change.
+  bitserial_sgt   — capability FLAG (no method): the bit-serial ops can
+                    consume sparse-graph-translation artifacts (the tagged
+                    ``(idx, counts, s_w, "sgt")`` word-column remap from
+                    ``kernels/sgt.py``) and exploit ``policy.jump="sgt"``.
+                    Probed and stripped exactly like ``bitserial_jump`` —
+                    the translation changes the schedule, never the result.
 
 Support is PROBED, not assumed: the registry asks ``supports()`` (bitwidths,
 jump modes, interpret fall-back) before dispatching, and falls back to the
@@ -26,7 +32,7 @@ import abc
 __all__ = ["Backend", "UnsupportedOpError", "OPS"]
 
 OPS = ("bitserial_mm", "bgemm", "bitpack", "wq_mm", "bitserial_fused",
-       "bitserial_jump")
+       "bitserial_jump", "bitserial_sgt")
 
 
 class UnsupportedOpError(NotImplementedError):

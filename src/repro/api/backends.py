@@ -114,8 +114,8 @@ class PopcountBackend(Backend):
 
 class PallasBackend(Backend):
     name = "pallas"
-    capabilities = _CORE_OPS | {"bitserial_jump"}
-    jump_modes = frozenset({"none", "mask", "compact"})
+    capabilities = _CORE_OPS | {"bitserial_jump", "bitserial_sgt"}
+    jump_modes = frozenset({"none", "mask", "compact", "sgt"})
     interpret_fallback = True
 
     def bitserial_mm(self, a_packed, b_packed, *, policy, tiles=None):

@@ -10,7 +10,10 @@ Fields map onto the paper's knobs:
   block_m/block_n/block_w — TC tile shape (paper's 8x128 tiles over packed
                             words; block_w counts uint32 words of K)
   mode                    — kernel compute unit: 'vpu' (popcount) | 'mxu'
-  jump                    — zero-tile jumping (§4.3): none | mask | compact
+  jump                    — zero-tile jumping (§4.3): none | mask | compact,
+                            or 'sgt' — sparse-graph translation
+                            (kernels/sgt.py): condense non-zero WORD
+                            columns per row window, TC-GNN style
   reuse                   — non-zero tile reuse (§4.4): keep the s*t plane
                             loop inside one kernel so A-tile loads are O(1)
   fused_requantize        — fuse the §4.5 rescale+requantize epilogue into
@@ -24,7 +27,7 @@ import dataclasses
 
 __all__ = ["ExecutionPolicy", "DEFAULT_POLICY", "JUMP_MODES", "COMPUTE_MODES"]
 
-JUMP_MODES = ("none", "mask", "compact")
+JUMP_MODES = ("none", "mask", "compact", "sgt")
 COMPUTE_MODES = ("vpu", "mxu")
 
 

@@ -41,8 +41,13 @@ def tile_occupancy_planes(a_packed: jax.Array, tile_m: int, tile_w: int) -> jax.
     zero across all s planes contributes nothing to the bit-serial sum, so
     skipping it is exact for any bitwidth. For the GNN aggregation A is the
     1-bit adjacency (s == 1) and this reduces to ``tile_occupancy``.
+
+    Callers holding a cached occupancy map should pass it down instead of
+    re-reducing (kernels.ops enforces the tiles > occupancy > recompute
+    precedence); the s == 1 case skips the cross-plane OR entirely.
     """
-    plane = jax.lax.reduce(a_packed, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+    plane = (a_packed[0] if a_packed.shape[0] == 1 else jax.lax.reduce(
+        a_packed, jnp.uint32(0), jax.lax.bitwise_or, (0,)))
     return tile_occupancy(plane, tile_m, tile_w)
 
 

@@ -20,6 +20,8 @@ Zero-tile jumping (paper §4.3), two TPU modes:
   compact — the K grid dimension is sized to the max non-zero tile count and
             a prefetched index array remaps BlockSpec index_maps, so zero
             tiles are neither loaded nor computed (true jumping).
+plus sparse-graph translation (kernels/sgt.py, TC-GNN style): the compact
+remap at single-word column granularity — see ``sgt=`` below.
 
 All variants accumulate in a VMEM scratch buffer and write each output
 block once on the last K step (no HBM round-trip between K steps).
@@ -117,12 +119,16 @@ def bgemm(
     mode: str = "vpu",
     occupancy: jax.Array | None = None,
     compact: tuple[jax.Array, jax.Array, int] | None = None,
+    sgt: tuple[jax.Array, jax.Array, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """1-bit GEMM. Shapes must be pre-padded to block multiples (ops.py pads).
 
     occupancy: (MT, KT) int32 0/1 -> mask-mode jumping.
     compact: (idx (MT, S), cnt (MT,), S) -> compact-mode jumping.
+    sgt: (idx (MT, S_w), cnt (MT,), S_w) word-column remap (kernels/sgt.py)
+    -> sparse-graph translation: the K grid visits only each row window's
+    non-zero WORD columns (1-word blocks), not block_w-word tiles.
     """
     m, w = a_packed.shape
     w2, n = b_packed.shape
@@ -135,6 +141,30 @@ def bgemm(
     # VMEM scratch accumulator: the int32 partial sums never round-trip
     # through the HBM-blocked o_ref; each block is written once at the end
     scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+
+    if sgt is not None:
+        # sparse-graph translation: the compact-jump schedule at WORD
+        # granularity — 1-word K blocks make the remapped block index the
+        # word id, so only condensed columns of A and B are DMA'd.
+        idx, cnt, s_w = sgt
+        s_w = max(int(s_w), 1)  # all-zero A: one guarded (no-op) step
+        assert s_w <= w, (s_w, w)
+        assert idx.shape[0] == mt and idx.shape[1] >= s_w and \
+            cnt.shape == (mt,), (idx.shape, cnt.shape, mt, s_w)
+        a_spec = pl.BlockSpec((block_m, 1),
+                              lambda i, j, s, idx_r, cnt_r: (i, idx_r[i, s]))
+        b_spec = pl.BlockSpec((1, block_n),
+                              lambda i, j, s, idx_r, cnt_r: (idx_r[i, s], j))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(mt, nt, s_w),
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            scratch_shapes=scratch,
+        )
+        kern = functools.partial(_kernel_compact, mode=mode, s_max=s_w)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(idx, cnt, a_packed, b_packed)
 
     if compact is not None:
         idx, cnt, s_max = compact

@@ -18,6 +18,12 @@ zero in every plane and contributes nothing for any bitwidth.
   compact — the K grid dimension is sized to the max non-zero tile count and
             a prefetched index array remaps the A AND B BlockSpec index_maps,
             so zero tiles are neither loaded nor computed (true DMA jumping).
+  sgt     — sparse-graph translation (kernels/sgt.py, TC-GNN style): the
+            same prefetched-remap machinery at single-WORD column
+            granularity — the K grid visits only the non-zero word columns
+            of each row window, so a tile with one nonzero word costs one
+            step instead of block_w. Strictly stronger than compact at
+            scattered high sparsity.
 
 All variants accumulate into a VMEM scratch buffer and write the output
 block once on the last K step — the int32 accumulator never round-trips
@@ -130,7 +136,7 @@ def _kernel_compact(idx_ref, cnt_ref, a_ref, b_ref, *rest, mode, s_max,
 
 
 def _pallas_bitserial(a_packed, b_packed, alpha, beta, *, block_m, block_n,
-                      block_w, mode, occupancy, compact, interpret,
+                      block_w, mode, occupancy, compact, sgt, interpret,
                       out_bits, relu):
     """Shared pallas_call builder for the plain and fused entry points.
 
@@ -153,11 +159,11 @@ def _pallas_bitserial(a_packed, b_packed, alpha, beta, *, block_m, block_n,
     scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
     epi = dict(out_bits=out_bits, relu=relu)
 
-    def specs(index_map):
+    def specs(index_map, kw=block_w):
         sp = [
-            pl.BlockSpec((s, block_m, block_w),
+            pl.BlockSpec((s, block_m, kw),
                          lambda i, j, k, *pre: (0, i, index_map(i, k, *pre))),
-            pl.BlockSpec((t, block_w, block_n),
+            pl.BlockSpec((t, kw, block_n),
                          lambda i, j, k, *pre: (0, index_map(i, k, *pre), j)),
         ]
         if fused:
@@ -166,6 +172,29 @@ def _pallas_bitserial(a_packed, b_packed, alpha, beta, *, block_m, block_n,
         return sp
 
     o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, k, *pre: (i, j))
+
+    if sgt is not None:
+        # sparse-graph translation: same compact-jump schedule (init at
+        # s==0, compute under s < count, write at s==s_w-1) but the remap
+        # addresses single WORD columns — with a 1-word K block the block
+        # index IS the word id, so the condensed columns are the only
+        # slices of A and B ever DMA'd.
+        idx, cnt, s_w = sgt
+        s_w = max(int(s_w), 1)  # all-zero A: one guarded (no-op) step
+        assert s_w <= w, (s_w, w)
+        assert idx.shape[0] == mt and idx.shape[1] >= s_w and \
+            cnt.shape == (mt,), (idx.shape, cnt.shape, mt, s_w)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(mt, nt, s_w),
+            in_specs=specs(lambda i, k, idx_r, cnt_r: idx_r[i, k], kw=1),
+            out_specs=o_spec,
+            scratch_shapes=scratch,
+        )
+        kern = functools.partial(_kernel_compact, mode=mode, s_max=s_w,
+                                 **epi)
+        return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                              interpret=interpret)(idx, cnt, *operands)
 
     if compact is not None:
         idx, cnt, s_max = compact
@@ -220,6 +249,7 @@ def bitserial_gemm(
     mode: str = "vpu",
     occupancy: jax.Array | None = None,
     compact: tuple[jax.Array, jax.Array, int] | None = None,
+    sgt: tuple[jax.Array, jax.Array, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Any-bitwidth GEMM. Shapes pre-padded to block multiples (ops.py pads).
@@ -227,10 +257,13 @@ def bitserial_gemm(
     occupancy: (MT, KT) int32 0/1 -> mask-mode jumping.
     compact: (idx (MT, >=S), cnt (MT,), S) -> compact-mode jumping; S is the
     static K-grid size (max non-zero tile count; clamped to >= 1).
+    sgt: (idx (MT, >=S_w), cnt (MT,), S_w) word-column remap from
+    kernels/sgt.py -> sparse-graph translation; S_w is the static K-grid
+    size (max non-zero WORD count per row window; clamped to >= 1).
     """
     return _pallas_bitserial(a_packed, b_packed, None, None, block_m=block_m,
                              block_n=block_n, block_w=block_w, mode=mode,
-                             occupancy=occupancy, compact=compact,
+                             occupancy=occupancy, compact=compact, sgt=sgt,
                              interpret=interpret, out_bits=0, relu=False)
 
 
@@ -248,16 +281,17 @@ def bitserial_fused(
     mode: str = "vpu",
     occupancy: jax.Array | None = None,
     compact: tuple[jax.Array, jax.Array, int] | None = None,
+    sgt: tuple[jax.Array, jax.Array, int] | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Any-bit GEMM with fused rescale+ReLU+requantize epilogue (§4.5).
 
-    Takes the same ``occupancy``/``compact`` jumping artifacts as
+    Takes the same ``occupancy``/``compact``/``sgt`` jumping artifacts as
     ``bitserial_gemm``; the epilogue runs on the last grid step regardless
-    of how many tiles were skipped.
+    of how many tiles (or word columns) were skipped.
     """
     return _pallas_bitserial(a_packed, b_packed, alpha, beta, block_m=block_m,
                              block_n=block_n, block_w=block_w, mode=mode,
-                             occupancy=occupancy, compact=compact,
+                             occupancy=occupancy, compact=compact, sgt=sgt,
                              interpret=interpret, out_bits=out_bits,
                              relu=relu)

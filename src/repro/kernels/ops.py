@@ -23,6 +23,7 @@ from repro.core import bitops, zerotile
 from repro.kernels import bgemm as _bgemm
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import bitserial as _bitserial
+from repro.kernels import sgt as _sgt
 from repro.kernels import wqmm as _wqmm
 
 __all__ = ["bgemm", "bitserial_gemm", "bitserial_fused", "bitpack",
@@ -49,22 +50,35 @@ def _pad2(x, bm, bw, axes=(0, 1)):
 
 
 def _unpack_tiles(tiles):
-    """tiles=(idx, counts, s_max) -> jit-friendly (idx, counts, static int)."""
+    """tiles=(idx, counts, s_max[, kind]) -> (idx, counts, static int, kind).
+
+    ``kind`` tags which remap the arrays are: ``"compact"`` (the default,
+    block_w-word k-TILE ids from ``zerotile.compact_artifacts``) or
+    ``"sgt"`` (single-WORD column ids from ``sgt.sgt_artifacts``). The
+    kind, like ``s_max``, is jit-static — it selects the kernel schedule.
+    """
     if tiles is None:
-        return None, None, 0
-    idx, cnt, s_max = tiles
+        return None, None, 0, "compact"
+    if len(tiles) == 4:
+        idx, cnt, s_max, kind = tiles
+    else:
+        (idx, cnt, s_max), kind = tiles, "compact"
+    if kind not in ("compact", "sgt"):
+        raise ValueError(
+            f"tiles kind must be 'compact' or 'sgt', got {kind!r}")
     if not isinstance(s_max, int):
         raise TypeError(
             f"tiles s_max must be a host int (it sizes the kernel grid), "
             f"got {type(s_max).__name__}")
-    return idx, cnt, s_max
+    return idx, cnt, s_max, kind
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
                                              "mode", "jump", "s_max",
-                                             "interpret"))
+                                             "tiles_kind", "interpret"))
 def _bgemm_call(a_packed, b_packed, tiles_idx, tiles_cnt, occupancy, *,
-                block_m, block_n, block_w, mode, jump, s_max, interpret):
+                block_m, block_n, block_w, mode, jump, s_max, tiles_kind,
+                interpret):
     m, _ = a_packed.shape
     _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w)
@@ -72,18 +86,29 @@ def _bgemm_call(a_packed, b_packed, tiles_idx, tiles_cnt, occupancy, *,
     kwargs = dict(block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, interpret=interpret)
     if tiles_idx is not None:
-        # precomputed compact artifacts: no per-call occupancy work
-        out = _bgemm.bgemm(a, b, compact=(tiles_idx, tiles_cnt, s_max),
-                           **kwargs)
+        # precomputed artifacts: no per-call occupancy work at all
+        if tiles_kind == "sgt":
+            out = _bgemm.bgemm(a, b, sgt=(tiles_idx, tiles_cnt, s_max),
+                               **kwargs)
+        else:
+            out = _bgemm.bgemm(a, b, compact=(tiles_idx, tiles_cnt, s_max),
+                               **kwargs)
+    elif jump == "sgt":
+        wocc = _sgt.word_occupancy(a, block_m)
+        idx, cnt = zerotile.compact_tiles(wocc)
+        out = _bgemm.bgemm(a, b, sgt=(idx, cnt, wocc.shape[1]), **kwargs)
+    elif jump == "compact":
+        # a precomputed occupancy map short-circuits the in-call
+        # OR-reduction (precedence: tiles > occupancy > recompute)
+        occ = (occupancy if occupancy is not None
+               else zerotile.tile_occupancy(a, block_m, block_w))
+        idx, cnt = zerotile.compact_tiles(occ)
+        out = _bgemm.bgemm(a, b, compact=(idx, cnt, occ.shape[1]), **kwargs)
     elif occupancy is not None:
         out = _bgemm.bgemm(a, b, occupancy=occupancy, **kwargs)
     elif jump == "mask":
         occ = zerotile.tile_occupancy(a, block_m, block_w)
         out = _bgemm.bgemm(a, b, occupancy=occ, **kwargs)
-    elif jump == "compact":
-        occ = zerotile.tile_occupancy(a, block_m, block_w)
-        idx, cnt = zerotile.compact_tiles(occ)
-        out = _bgemm.bgemm(a, b, compact=(idx, cnt, occ.shape[1]), **kwargs)
     else:
         out = _bgemm.bgemm(a, b, **kwargs)
     return out[:m, :n]
@@ -98,8 +123,8 @@ def bgemm(
     block_n: int | None = None,
     block_w: int | None = None,
     mode: str | None = None,
-    jump: str | None = None,  # none | mask | compact
-    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    jump: str | None = None,  # none | mask | compact | sgt
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max[, kind])
     occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -107,50 +132,66 @@ def bgemm(
 
     ``tiles``/``occupancy`` supply PREcomputed jump artifacts (e.g. from the
     serve tile cache) so the jitted call does no occupancy analysis; they
-    take precedence over the ``jump`` mode, which recomputes them in-call.
+    take precedence over the ``jump`` mode, which recomputes them in-call
+    (a precomputed ``occupancy`` also short-circuits ``jump="compact"``'s
+    in-call reduction). ``tiles`` may be the tagged 4-tuple from
+    ``sgt.sgt_artifacts`` to select the sparse-graph-translation kernel.
     """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, jump=jump, interpret=interpret)
-    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    t_idx, t_cnt, s_max, kind = _unpack_tiles(tiles)
     return _bgemm_call(a_packed, b_packed, t_idx, t_cnt, occupancy,
-                       s_max=s_max, **kw)
+                       s_max=s_max, tiles_kind=kind, **kw)
 
 
 def _bitserial_jump_artifacts(a, tiles_idx, tiles_cnt, occupancy, jump,
-                              block_m, block_w, s_max):
-    """Resolve (occupancy, compact) for a padded (s, M, W) packed operand.
+                              block_m, block_w, s_max, tiles_kind):
+    """Resolve (occupancy, compact, sgt) for a padded (s, M, W) operand.
 
     Precomputed artifacts win over the ``jump`` mode (which recomputes them
-    in-call from the OR of A's bit planes — exact for any bitwidth).
+    in-call from the OR of A's bit planes — exact for any bitwidth), and a
+    precomputed ``occupancy`` map short-circuits ``jump="compact"``'s
+    in-call OR-reduction: the documented precedence is
+    tiles > occupancy > recompute, never recompute what the caller cached.
     """
     if tiles_idx is not None:
-        return None, (tiles_idx, tiles_cnt, s_max)
-    if occupancy is not None:
-        return occupancy, None
-    if jump == "mask":
-        return zerotile.tile_occupancy_planes(a, block_m, block_w), None
+        if tiles_kind == "sgt":
+            return None, None, (tiles_idx, tiles_cnt, s_max)
+        return None, (tiles_idx, tiles_cnt, s_max), None
+    if jump == "sgt":
+        # word-granularity translation; a tile-granularity occupancy map
+        # cannot seed it (wrong grid), so this recomputes from the planes
+        wocc = _sgt.word_occupancy(a, block_m)
+        idx, cnt = zerotile.compact_tiles(wocc)
+        return None, None, (idx, cnt, wocc.shape[1])
     if jump == "compact":
-        occ = zerotile.tile_occupancy_planes(a, block_m, block_w)
+        occ = (occupancy if occupancy is not None
+               else zerotile.tile_occupancy_planes(a, block_m, block_w))
         idx, cnt = zerotile.compact_tiles(occ)
-        return None, (idx, cnt, occ.shape[1])
-    return None, None
+        return None, (idx, cnt, occ.shape[1]), None
+    if occupancy is not None:
+        return occupancy, None, None
+    if jump == "mask":
+        return zerotile.tile_occupancy_planes(a, block_m, block_w), None, None
+    return None, None, None
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_w",
                                              "mode", "jump", "s_max",
-                                             "interpret"))
+                                             "tiles_kind", "interpret"))
 def _bitserial_gemm_call(a_packed, b_packed, tiles_idx, tiles_cnt, occupancy,
                          *, block_m, block_n, block_w, mode, jump, s_max,
-                         interpret):
+                         tiles_kind, interpret):
     _, m, _ = a_packed.shape
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
-    occ, compact = _bitserial_jump_artifacts(
-        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max)
+    occ, compact, sgt = _bitserial_jump_artifacts(
+        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max,
+        tiles_kind)
     out = _bitserial.bitserial_gemm(a, b, block_m=block_m, block_n=block_n,
                                     block_w=block_w, mode=mode,
-                                    occupancy=occ, compact=compact,
+                                    occupancy=occ, compact=compact, sgt=sgt,
                                     interpret=interpret)
     return out[:m, :n]
 
@@ -164,44 +205,48 @@ def bitserial_gemm(
     block_n: int | None = None,
     block_w: int | None = None,
     mode: str | None = None,
-    jump: str | None = None,  # none | mask | compact
-    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    jump: str | None = None,  # none | mask | compact | sgt
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max[, kind])
     occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
     """(s,M,W)x(t,W,N)->int32 exact any-bitwidth GEMM with zero-tile jumping.
 
     ``tiles``/``occupancy`` supply precomputed jump artifacts keyed to A's
-    packed-and-padded tile grid (e.g. the serve cache's compact indices);
-    they take precedence over ``jump``, which recomputes them per call.
+    packed-and-padded tile grid (e.g. the serve cache's compact indices, or
+    the tagged word-column remap from ``sgt.sgt_artifacts``); they take
+    precedence over ``jump``, which recomputes them per call.
     """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, jump=jump, interpret=interpret)
-    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    t_idx, t_cnt, s_max, kind = _unpack_tiles(tiles)
     return _bitserial_gemm_call(a_packed, b_packed, t_idx, t_cnt, occupancy,
-                                s_max=s_max, **kw)
+                                s_max=s_max, tiles_kind=kind, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("out_bits", "relu", "block_m",
                                              "block_n", "block_w", "mode",
-                                             "jump", "s_max", "interpret"))
+                                             "jump", "s_max", "tiles_kind",
+                                             "interpret"))
 def _bitserial_fused_call(a_packed, b_packed, alpha, beta, tiles_idx,
                           tiles_cnt, occupancy, *, out_bits, relu,
                           block_m, block_n, block_w, mode, jump, s_max,
-                          interpret):
+                          tiles_kind, interpret):
     _, m, _ = a_packed.shape
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
     al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
     be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
-    occ, compact = _bitserial_jump_artifacts(
-        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max)
+    occ, compact, sgt = _bitserial_jump_artifacts(
+        a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max,
+        tiles_kind)
     out = _bitserial.bitserial_fused(a, b, al, be, out_bits=out_bits,
                                      relu=relu, block_m=block_m,
                                      block_n=block_n, block_w=block_w,
                                      mode=mode, occupancy=occ,
-                                     compact=compact, interpret=interpret)
+                                     compact=compact, sgt=sgt,
+                                     interpret=interpret)
     return out[:m, :n]
 
 
@@ -218,8 +263,8 @@ def bitserial_fused(
     block_n: int | None = None,
     block_w: int | None = None,
     mode: str | None = None,
-    jump: str | None = None,  # none | mask | compact
-    tiles: tuple | None = None,      # precomputed (idx, counts, s_max)
+    jump: str | None = None,  # none | mask | compact | sgt
+    tiles: tuple | None = None,      # precomputed (idx, counts, s_max[, kind])
     occupancy: jax.Array | None = None,  # precomputed (MT, KT) mask
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -230,10 +275,11 @@ def bitserial_fused(
     """
     kw = _resolve(policy, block_m=block_m, block_n=block_n, block_w=block_w,
                   mode=mode, jump=jump, interpret=interpret)
-    t_idx, t_cnt, s_max = _unpack_tiles(tiles)
+    t_idx, t_cnt, s_max, kind = _unpack_tiles(tiles)
     return _bitserial_fused_call(a_packed, b_packed, alpha, beta, t_idx,
                                  t_cnt, occupancy, out_bits=out_bits,
-                                 relu=relu, s_max=s_max, **kw)
+                                 relu=relu, s_max=s_max, tiles_kind=kind,
+                                 **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("nbits", "block_m", "block_w",

@@ -1,0 +1,140 @@
+"""Sparse-graph translation (SGT): column-condensed bitserial artifacts.
+
+Zero-tile jumping (``repro.core.zerotile``, paper §4.3) skips k-tiles that
+are zero across every bit plane, but still pays the full (block_m, block_w)
+dense cost for any tile holding even one nonzero — on power-law graph
+adjacencies most surviving tiles are themselves mostly zero. TC-GNN
+(PAPERS.md, arXiv 2112.02052) condenses the non-zero *columns* of each row
+window into dense TC blocks instead; for QGTC's packed bit-plane layout the
+natural column unit is the 32-bit word, so the translation here works at
+word granularity:
+
+  per row window i (``tile_m`` rows of the packed A), the non-zero WORD
+  columns are identified (OR over bit planes, OR over the window's rows)
+  and their ids compacted front-aligned — exactly the ``compact_tiles``
+  remap, but over single-word columns instead of ``block_w``-word tiles.
+
+The kernels consume the remap through the same ``PrefetchScalarGridSpec``
+index machinery as compact jumping (A BlockSpec (s, block_m, 1) at word
+``idx[i, s]``, B BlockSpec (t, 1, block_n) at row-of-words ``idx[i, s]``),
+so condensed columns are the only operand slices ever DMA'd — the remap IS
+the gathered/condensed-B artifact, with no materialized per-window copy of
+B. :func:`condense` materializes that gather eagerly as the test oracle
+proving the translation is a pure re-layout.
+
+SGT is strictly stronger than compact jumping at scattered high sparsity
+(a tile with one nonzero word costs 1 step instead of block_w words) and
+strictly weaker at dense/banded structure (block_w words per grid step
+amortize the per-step overhead). The tuning sweep picks per cell.
+
+Artifacts depend only on ``tile_m`` — unlike compact tiles they are valid
+for ANY ``block_w``, so a cached translation survives policy retuning of
+the word-tile width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zerotile
+
+__all__ = ["word_occupancy", "sgt_plan", "sgt_artifacts", "condense",
+           "sgt_stats"]
+
+
+def word_occupancy(a_packed: jax.Array, tile_m: int) -> jax.Array:
+    """Packed A -> (M/tile_m, W) int32 0/1 per-word-column occupancy.
+
+    Accepts a (M, W) plane or a (s, M, W) plane stack; a word column of a
+    row window is occupied iff any of its ``tile_m`` words in ANY plane is
+    non-zero (zero everywhere => no contribution at any bitwidth, same
+    exactness argument as ``zerotile.tile_occupancy_planes``). M must be
+    padded to ``tile_m`` by the caller.
+    """
+    if a_packed.ndim == 2:
+        a_packed = a_packed[None]
+    plane = (a_packed[0] if a_packed.shape[0] == 1 else jax.lax.reduce(
+        a_packed, jnp.uint32(0), jax.lax.bitwise_or, (0,)))
+    m, w = plane.shape
+    assert m % tile_m == 0, (m, tile_m)
+    ored = jax.lax.reduce(plane.reshape(m // tile_m, tile_m, w),
+                          jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    return (ored != 0).astype(jnp.int32)
+
+
+def sgt_plan(word_occ: jax.Array):
+    """Word occupancy (MT, W) -> (idx (MT, W), counts (MT,)) remap.
+
+    ``idx[i, :counts[i]]`` are row window i's non-zero word-column ids in
+    ascending order, tail padded with 0 (the kernel masks by count) — the
+    condensed-column translation table the SGT BlockSpec index_maps read.
+    """
+    return zerotile.compact_tiles(word_occ)
+
+
+def sgt_artifacts(a_packed: jax.Array, tile_m: int):
+    """Eager one-step recipe for the kernels' SGT ``tiles=`` contract.
+
+    Pads a packed (M, W) plane or (s, M, W) stack to the row-window grid,
+    reduces word occupancy, compacts, and syncs the max count to a HOST
+    int — returns the tagged ``(idx, counts, s_w, "sgt")`` tuple the
+    ``tiles=`` plumbing (kernels.ops, repro.api dispatch, the serve cache)
+    consumes. Eager only: the host sync makes it unusable under jit (use
+    ``jump="sgt"`` there instead, which keeps the static full-W bound).
+    """
+    from repro.core.bitops import pad_to
+
+    if a_packed.ndim == 2:
+        a_packed = a_packed[None]
+    ap = pad_to(a_packed, 1, tile_m)
+    occ = word_occupancy(ap, tile_m)
+    idx, counts = sgt_plan(occ)
+    return idx, counts, int(jnp.max(counts)), "sgt"
+
+
+def condense(a_packed: jax.Array, b_packed: jax.Array, idx: jax.Array,
+             counts: jax.Array, tile_m: int, s_w: int | None = None):
+    """Materialize the translation: per-window condensed A + gathered B.
+
+    Returns ``(a_cond (s, MT, tile_m, s_w), b_gath (t, MT, s_w, N))`` with
+    the padded tail of each window zeroed, so a plain dense per-window
+    popcount GEMM over the condensed operands reproduces the original
+    product exactly — the oracle the kernel's remap-consuming path is
+    tested against. The kernels never build this (the BlockSpec remap
+    gathers in-flight); it exists for tests and for porting to engines
+    without prefetch-indexed DMA.
+    """
+    if a_packed.ndim == 2:
+        a_packed = a_packed[None]
+    if b_packed.ndim == 2:
+        b_packed = b_packed[None]
+    s, m, w = a_packed.shape
+    mt = m // tile_m
+    assert idx.shape[0] == mt and counts.shape == (mt,), (
+        idx.shape, counts.shape, mt)
+    if s_w is None:
+        s_w = int(jnp.max(counts))
+    s_w = max(int(s_w), 1)
+    sel = idx[:, :s_w]                                      # (MT, s_w)
+    live = jnp.arange(s_w)[None, :] < counts[:, None]       # (MT, s_w)
+    aw = a_packed.reshape(s, mt, tile_m, w)
+    a_cond = jnp.take_along_axis(
+        aw, jnp.broadcast_to(sel[None, :, None, :], (s, mt, tile_m, s_w)),
+        axis=3)
+    a_cond = jnp.where(live[None, :, None, :], a_cond, jnp.uint32(0))
+    b_gath = b_packed[:, sel, :]                            # (t, MT, s_w, N)
+    b_gath = jnp.where(live[None, :, :, None], b_gath, jnp.uint32(0))
+    return a_cond, b_gath
+
+
+def sgt_stats(word_occ: jax.Array) -> dict:
+    """Word-granularity analogue of ``zerotile.occupancy_stats``."""
+    total = word_occ.size
+    nz = int(jnp.sum(word_occ))
+    return {
+        "words_total": int(total),
+        "words_nonzero": nz,
+        "words_zero": int(total - nz),
+        "nonzero_ratio": nz / max(total, 1),
+        "skip_ratio": 1.0 - nz / max(total, 1),
+    }

@@ -137,7 +137,7 @@ def serve_gnn(args) -> dict:
     with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         server = GNNServer(qparams, cfg, feat_bits=args.feat_bits,
                            buckets=buckets, mesh=mesh, admission=admission,
-                           tuning_table=table)
+                           cache_bytes=args.cache_bytes, tuning_table=table)
         for rnd in range(args.rounds):
             for r in reqs:
                 server.submit(type(r)(edges=r.edges, features=r.features,
@@ -177,6 +177,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--rounds", type=int, default=2,
                     help="GNN traffic rounds (repeats exercise the cache)")
     ap.add_argument("--feat-bits", type=int, default=8)
+    ap.add_argument("--cache-bytes", type=int, default=None,
+                    help="strict resident-bytes bound on the tile cache "
+                         "(LRU; entry count stays the fallback bound)")
     # GNN admission-control knobs (unset = unbounded queue)
     ap.add_argument("--max-queue-depth", type=int, default=None,
                     help="bound the GNN request queue at N requests")

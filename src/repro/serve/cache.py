@@ -16,7 +16,9 @@ aligns each request's node offset to the kernel tile footprint
 block-diagonal batch's artifacts from the members' cached entries by pure
 offset shifting — dense blocks and packed bit-planes placed at
 ``(off, off)`` / ``(off, off // 32)``, occupancy placed at the tile-grid
-offset, compact k-tile indices shifted by the member's column-tile offset.
+offset, compact k-tile indices shifted by the member's column-tile offset,
+and the sparse-graph-translation word-column remap (kernels/sgt.py) shifted
+by the member's word offset ``off // 32``.
 A repeat subgraph therefore hits the cache in ANY coalescing order; under
 per-group keying a novel ordering was a guaranteed miss.
 
@@ -47,12 +49,21 @@ class TileEntry:
     occ_stats: dict        # occupancy_stats() snapshot (host ints)
     s_max: int = 0         # host int: max(compact_counts) — sizes the
     #                        compact kernel's K grid without a device sync
+    # sparse-graph translation artifacts (kernels/sgt.py): the per-row-
+    # window non-zero WORD-column remap. Depend only on block_m, so they
+    # survive block_w retuning; None on entries built before SGT existed.
+    sgt_idx: jax.Array | None = None     # (Mt/tm, Wt) int32 word ids
+    sgt_counts: jax.Array | None = None  # (Mt/tm,) int32
+    sgt_w: int = 0         # host int: max(sgt_counts) — sizes the SGT
+    #                        kernel's K grid without a device sync
 
     def nbytes(self) -> int:
         n = 0
         for f in (self.adj, self.inv_deg, self.a_packed, self.occupancy,
-                  self.compact_idx, self.compact_counts):
-            n += f.size * f.dtype.itemsize
+                  self.compact_idx, self.compact_counts, self.sgt_idx,
+                  self.sgt_counts):
+            if f is not None:
+                n += f.size * f.dtype.itemsize
         return n
 
 
@@ -80,13 +91,19 @@ def compose_entries(entries: list[TileEntry], offsets: list[int],
             f"(block_m={tm}, {step} node columns per k-tile); pad the "
             f"bucket to lcm({tm}, {step})")
     mt, kt = n_pad // tm, n_pad // step
+    wt = n_pad // 32
     adj = jnp.zeros((n_pad, n_pad), entries[0].adj.dtype)
     inv_deg = jnp.ones((n_pad, 1), jnp.float32)  # padding rows: deg 0
     a_packed = jnp.zeros((n_pad, n_pad // 32), jnp.uint32)
     occ = jnp.zeros((mt, kt), jnp.int32)
     idx = jnp.zeros((mt, kt), jnp.int32)
     counts = jnp.zeros((mt,), jnp.int32)
-    tiles_nonzero, s_max = 0, 0
+    # SGT word-column remap composes by the same shifting, at word
+    # granularity (off // 32); only when every member carries it
+    have_sgt = all(e.sgt_idx is not None for e in entries)
+    sgt_idx = jnp.zeros((mt, wt), jnp.int32) if have_sgt else None
+    sgt_counts = jnp.zeros((mt,), jnp.int32) if have_sgt else None
+    tiles_nonzero, s_max, sgt_w = 0, 0, 0
     for e, off in zip(entries, offsets):
         n_sub = e.adj.shape[0]
         if off % tm or off % step or off + n_sub > n_pad:
@@ -104,6 +121,15 @@ def compose_entries(entries: list[TileEntry], offsets: list[int],
         shifted = jnp.where(mask, e.compact_idx + k0, 0).astype(jnp.int32)
         idx = jax.lax.dynamic_update_slice(idx, shifted, (r0, 0))
         counts = jax.lax.dynamic_update_slice(counts, e.compact_counts, (r0,))
+        if have_sgt:
+            w0 = off // 32
+            wt_sub = e.sgt_idx.shape[1]
+            smask = jnp.arange(wt_sub)[None, :] < e.sgt_counts[:, None]
+            sshift = jnp.where(smask, e.sgt_idx + w0, 0).astype(jnp.int32)
+            sgt_idx = jax.lax.dynamic_update_slice(sgt_idx, sshift, (r0, 0))
+            sgt_counts = jax.lax.dynamic_update_slice(sgt_counts,
+                                                      e.sgt_counts, (r0,))
+            sgt_w = max(sgt_w, e.sgt_w)
         tiles_nonzero += e.occ_stats["tiles_nonzero"]
         s_max = max(s_max, e.s_max)
     total = mt * kt
@@ -116,7 +142,8 @@ def compose_entries(entries: list[TileEntry], offsets: list[int],
     }
     return TileEntry(adj=adj, inv_deg=inv_deg, a_packed=a_packed,
                      occupancy=occ, compact_idx=idx, compact_counts=counts,
-                     occ_stats=occ_stats, s_max=s_max)
+                     occ_stats=occ_stats, s_max=s_max, sgt_idx=sgt_idx,
+                     sgt_counts=sgt_counts, sgt_w=sgt_w)
 
 
 class TileCache:
@@ -135,12 +162,27 @@ class TileCache:
       skipped, but the batch still ships its compound buffer for the
       missing members). Reporting partial composition as "hit" would
       overstate the transfer savings.
+
+    Eviction is bounded two ways: ``capacity`` counts entries (the
+    fallback bound), ``cache_bytes`` bounds RESIDENT BYTES — entries vary
+    widely in size per fingerprint (a big subgraph's adjacency + SGT
+    remap can outweigh dozens of small ones), so an entry count alone can
+    blow the device-memory envelope. The bytes bound is strict: eviction
+    pops LRU-first until resident bytes fit, and a single entry larger
+    than the bound is itself evicted (the caller still holds the entry it
+    just built; repeats rebuild rather than pinning an over-budget
+    resident). ``resident_bytes`` is maintained incrementally and
+    reported through ``ServeStats``.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, cache_bytes: int | None = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
+        if cache_bytes is not None and cache_bytes <= 0:
+            raise ValueError(f"cache_bytes must be positive, got {cache_bytes}")
         self.capacity = capacity
+        self.cache_bytes = cache_bytes
+        self.resident_bytes = 0
         self._entries: collections.OrderedDict = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -162,10 +204,16 @@ class TileCache:
         return entry
 
     def put(self, key, entry: TileEntry) -> None:
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.resident_bytes -= old.nbytes()
         self._entries[key] = entry
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        self.resident_bytes += entry.nbytes()
+        while len(self._entries) > self.capacity or (
+                self.cache_bytes is not None
+                and self.resident_bytes > self.cache_bytes):
+            _, evicted = self._entries.popitem(last=False)
+            self.resident_bytes -= evicted.nbytes()
             self.evictions += 1
 
     def note_batch(self, n_cached: int, n_members: int) -> None:
@@ -181,6 +229,7 @@ class TileCache:
 
     def clear(self) -> None:
         self._entries.clear()
+        self.resident_bytes = 0
 
     @property
     def hit_rate(self) -> float:

@@ -53,6 +53,7 @@ from repro import api
 from repro.core import bitops
 from repro.core.quantize import QuantParams
 from repro.core.zerotile import compact_tiles, occupancy_stats, tile_occupancy
+from repro.kernels import sgt
 from repro.graph.batching import SubgraphBatch
 from repro.graph.packing import (compound_nbytes, transfer_packed,
                                  transfer_packed_feats)
@@ -83,6 +84,9 @@ class ServeStats:
     cache_hits: int = 0
     cache_misses: int = 0
     cache_partial_hits: int = 0
+    # bytes resident in the tile cache after the latest batch (snapshot,
+    # not a counter): tracks the cache_bytes= LRU bound
+    cache_resident_bytes: int = 0
     # admission accounting: every submit is admitted or shed (monotone:
     # requests_admitted + requests_shed == submit calls); shed_reasons
     # histograms the policy reason strings; submit_blocked counts
@@ -132,6 +136,7 @@ class ServeStats:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_partial_hits": self.cache_partial_hits,
+            "cache_resident_bytes": self.cache_resident_bytes,
             "requests_admitted": self.requests_admitted,
             "requests_shed": self.requests_shed,
             "submit_blocked": self.submit_blocked,
@@ -158,8 +163,11 @@ class GNNServer:
     repro.api registry (None = the active ``repro.api.use`` context /
     registered default). The policy's tile shape also drives the zero-tile
     accounting so reported skip ratios match what the kernel would skip.
-    ``cache_entries=0`` disables the tile cache; ``buckets=None`` disables
-    shape bucketing (exact padding, the recompile-per-shape baseline).
+    ``cache_entries=0`` disables the tile cache; ``cache_bytes=`` adds a
+    strict resident-bytes LRU bound on top of the entry bound (entries
+    vary widely in size per subgraph — see serve/cache.py); ``buckets=
+    None`` disables shape bucketing (exact padding, the
+    recompile-per-shape baseline).
     ``admission=`` bounds the queue (see serve/queue.py AdmissionPolicy);
     None = unbounded (every submit admitted).
 
@@ -179,8 +187,8 @@ class GNNServer:
                  backend=None, policy: api.ExecutionPolicy | None = None,
                  buckets=None, node_budget: int | None = None,
                  edge_budget: int | None = None, tile: int = 128,
-                 cache_entries: int = 64, mesh=None,
-                 admission: AdmissionPolicy | None = None,
+                 cache_entries: int = 64, cache_bytes: int | None = None,
+                 mesh=None, admission: AdmissionPolicy | None = None,
                  tuning_table="auto"):
         self.qparams = qparams
         self.cfg = cfg
@@ -196,7 +204,8 @@ class GNNServer:
             self._table = tune_table.TuningTable.load(tuning_table)
         self._bucket_pols: dict = {}  # n_pad -> tuned policy | None
         self.stats = ServeStats()
-        self.cache = TileCache(cache_entries) if cache_entries > 0 else None
+        self.cache = (TileCache(cache_entries, cache_bytes=cache_bytes)
+                      if cache_entries > 0 else None)
         # block offsets aligned to the kernel tile footprint so cached
         # per-subgraph artifacts compose into any batch by offset shifting.
         # With no explicit policy the table's largest-bucket entry sets the
@@ -264,11 +273,16 @@ class GNNServer:
         fbits = feat_bits
         be = backend
         def _fwd(qp, adj, packed, scale, zero, inv_deg, t_idx, t_cnt,
-                 s_max, pol):
+                 s_max, t_kind, pol):
             xq = bitops.bit_compose(
                 bitops.unpack_along_axis(packed, axis=2, size=d_in))
             qpx = QuantParams(nbits=fbits, scale=scale, zero=zero)
-            tiles = (t_idx, t_cnt, s_max) if t_idx is not None else None
+            tiles = None
+            if t_idx is not None:
+                # t_kind (static) tags which remap the arrays are: compact
+                # k-tile ids or the SGT word-column translation
+                tiles = ((t_idx, t_cnt, s_max, "sgt") if t_kind == "sgt"
+                         else (t_idx, t_cnt, s_max))
             fwd_pol = pol
             if tiles is not None:
                 # The cached tiles describe only the adjacency, so the
@@ -283,7 +297,7 @@ class GNNServer:
             return gnn.forward_qgtc(qp, adj, (xq, qpx), inv_deg, cfg,
                                     backend=be, policy=fwd_pol, tiles=tiles)
 
-        self._fwd = jax.jit(_fwd, static_argnames=("s_max", "pol"))
+        self._fwd = jax.jit(_fwd, static_argnames=("s_max", "t_kind", "pol"))
 
     # ------------------------------------------------------------- probes
 
@@ -412,11 +426,17 @@ class GNNServer:
         ap = bitops.pad_to(bitops.pad_to(ap, 0, tm), 1, tw)
         occ = tile_occupancy(ap, tm, tw)
         idx, counts = compact_tiles(occ)
+        # the SGT word-column remap rides along: same OR-reduction source,
+        # word granularity (sgt.word_occupancy reuses the packed plane)
+        wocc = sgt.word_occupancy(ap, tm)
+        s_idx, s_counts = compact_tiles(wocc)
         return TileEntry(adj=adj, inv_deg=inv_deg, a_packed=ap,
                          occupancy=occ, compact_idx=idx,
                          compact_counts=counts,
                          occ_stats=occupancy_stats(occ),
-                         s_max=int(jnp.max(counts)))
+                         s_max=int(jnp.max(counts)),
+                         sgt_idx=s_idx, sgt_counts=s_counts,
+                         sgt_w=int(jnp.max(s_counts)))
 
     def _policy_for_n(self, n_pad: int) -> api.ExecutionPolicy | None:
         """Per-bucket policy: constructor ``policy=`` > tuning table >
@@ -443,32 +463,44 @@ class GNNServer:
                 for n, p in sorted(self._bucket_pols.items())}
 
     def _jump_tiles(self, entry: TileEntry, pol=None):
-        """Cached compact tiles for the jitted forward, or (None, None, 0).
+        """Cached jump artifacts for the jitted forward: (idx, counts,
+        s_max, kind) with kind "compact" | "sgt" | None (no artifacts).
 
         Active when the engine's (backend, policy) pair asks for compact
-        jumping and the backend can exploit it. ``pol=None`` resolves the
-        constructor policy or the ambient context (the per-bucket tuned
-        policy is passed in by ``_forward``). ``s_max`` is rounded up to
-        the next power of two (clamped to the tile-grid bound) so the jit
-        cache stays small: one executable per (bucket, rounded count), not
-        one per distinct subgraph sparsity.
+        jumping or sparse-graph translation and the backend can exploit
+        it. ``pol=None`` resolves the constructor policy or the ambient
+        context (the per-bucket tuned policy is passed in by
+        ``_forward``). ``s_max`` is rounded up to the next power of two
+        (clamped to the grid bound) so the jit cache stays small: one
+        executable per (bucket, rounded count), not one per distinct
+        subgraph sparsity.
         """
         be = (api.get_backend(self.backend) if self.backend is not None
               else api.current()[0])
         if pol is None:
             pol = self.policy if self.policy is not None else api.current()[1]
+        if (pol.jump == "sgt" and be.supports("bitserial_sgt")
+                and entry.sgt_idx is not None
+                and pol.block_m == self._tile_shape[0]):
+            # the word-column remap depends only on block_m (not block_w),
+            # so it survives an ambient policy with a retuned word tile
+            wt = entry.sgt_idx.shape[1]
+            s_pad = 1 << max(0, entry.sgt_w - 1).bit_length()
+            return (entry.sgt_idx, entry.sgt_counts,
+                    min(s_pad, max(wt, 1)), "sgt")
         if pol.jump != "compact" or not be.supports("bitserial_jump"):
-            return None, None, 0
+            return None, None, 0, None
         if (pol.block_m, pol.block_w) != self._tile_shape:
             # the cached artifacts live on the construction-time tile
             # grid; an ambient policy with a different grid must not
             # consume them (the kernel would jump on the wrong tiles).
             # Jumping is an optimization, never a semantic change — the
             # forward recomputes occupancy in-call on its own grid.
-            return None, None, 0
+            return None, None, 0, None
         kt = entry.compact_idx.shape[1]
         s_pad = 1 << max(0, entry.s_max - 1).bit_length()
-        return entry.compact_idx, entry.compact_counts, min(s_pad, max(kt, 1))
+        return (entry.compact_idx, entry.compact_counts,
+                min(s_pad, max(kt, 1)), "compact")
 
     def _execute(self, batch: SubgraphBatch, key: str):
         """Transfer + forward one batch; returns (logits, tile entry)."""
@@ -561,11 +593,11 @@ class GNNServer:
 
     def _forward(self, device, entry: TileEntry, packed, meta):
         pol = self._policy_for_n(entry.adj.shape[0])
-        t_idx, t_cnt, s_max = self._jump_tiles(entry, pol)
+        t_idx, t_cnt, s_max, t_kind = self._jump_tiles(entry, pol)
         return self._fwd(self._params_for(device), entry.adj, packed,
                          jnp.float32(meta["scale"]),
                          jnp.float32(meta["zero"]), entry.inv_deg,
-                         t_idx, t_cnt, s_max, pol)
+                         t_idx, t_cnt, s_max, t_kind, pol)
 
     def _check_feat_dim(self, batch: SubgraphBatch) -> None:
         if batch.features.shape[1] != self.cfg.in_dim:
@@ -583,3 +615,5 @@ class GNNServer:
         self.stats.nodes += batch.n_valid
         self.stats.wall_s += elapsed_s
         self.stats.batch_latencies_s.append(elapsed_s)
+        if self.cache is not None:
+            self.stats.cache_resident_bytes = self.cache.resident_bytes

@@ -41,6 +41,7 @@ import numpy as np
 from repro import api
 from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
 from repro.core import bitops, zerotile
+from repro.kernels import sgt as sgt_lib
 from repro.perf.report import bench_median, percentile
 from repro.tune.table import (TableEntry, TuningTable, policy_to_dict,
                               provenance)
@@ -57,12 +58,13 @@ DEFAULT_CANDIDATES = (
     {},                              # the hand-picked DEFAULT_POLICY arm
     {"jump": "mask"},
     {"jump": "compact"},
+    {"jump": "sgt"},                 # sparse-graph translation (kernels/sgt)
     {"mode": "mxu"},
     {"block_m": 16, "block_w": 8},
 )
 
 # Tiny grid for `repro.launch.sweep --smoke` (CI): one shape, two bands,
-# three candidates — one of them (block_m=12) deliberately invalid to
+# four candidates — one of them (block_m=12) deliberately invalid to
 # exercise the legible-rejection path end to end.
 SMOKE_CONFIG = {
     "name": "smoke",
@@ -71,13 +73,14 @@ SMOKE_CONFIG = {
     "sparsity_bands": [0.0, 0.9],
     "shapes": [[16, 256, 16]],
     "backend": "pallas",
-    "candidates": [{}, {"jump": "compact"}, {"block_m": 12}],
+    "candidates": [{}, {"jump": "compact"}, {"jump": "sgt"},
+                   {"block_m": 12}],
     "iters": 2,
     "warmup": 1,
     "serve": {
         "dataset": "ogbn-arxiv", "scale": 0.004, "parts": 4,
         "rounds": 1, "levels": 2,
-        "candidates": [{}, {"jump": "compact"}],
+        "candidates": [{}, {"jump": "compact"}, {"jump": "sgt"}],
     },
 }
 
@@ -160,6 +163,7 @@ def _sweep_cell(op, bits, band, shape, backend, cands, iters, warmup,
     ref = np.asarray(_cell_runner(op, "xla_dot", ap, bp, alpha, beta)(
         DEFAULT_POLICY))
     tiles_by_grid = {}
+    sgt_by_bm = {}
     records, arms = [], []
     for ov, pol in cands:
         tiles = None
@@ -170,6 +174,13 @@ def _sweep_cell(op, bits, band, shape, backend, cands, iters, warmup,
                 # eager/serving contract the compact path is honest under
                 tiles_by_grid[grid] = zerotile.compact_artifacts(ap, *grid)
             tiles = tiles_by_grid[grid]
+        elif pol.jump == "sgt":
+            # translation artifacts depend only on block_m (word-granular
+            # remap), so they survive block_w-varying candidates
+            if pol.block_m not in sgt_by_bm:
+                sgt_by_bm[pol.block_m] = sgt_lib.sgt_artifacts(ap,
+                                                               pol.block_m)
+            tiles = sgt_by_bm[pol.block_m]
         out = np.asarray(run(pol, tiles))
         np.testing.assert_array_equal(
             out, ref, err_msg=(f"sweep parity: {op} {bits}b z{band} "

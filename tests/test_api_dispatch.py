@@ -167,6 +167,12 @@ def test_supports_probing():
     assert pallas.supports("bitserial_jump")
     assert not xla.supports("bitserial_jump")
     assert not api.get_backend("popcount").supports("bitserial_jump")
+    # sparse-graph translation is its own probed capability: the tagged
+    # sgt tiles contract is pallas-only, like the compact one
+    assert pallas.supports("bitserial_sgt")
+    assert not xla.supports("bitserial_sgt")
+    assert not api.get_backend("popcount").supports("bitserial_sgt")
+    assert "sgt" in pallas.jump_modes and "sgt" not in xla.jump_modes
 
 
 def test_tiles_kwarg_gated_on_capability():
@@ -182,6 +188,25 @@ def test_tiles_kwarg_gated_on_capability():
     pol = api.DEFAULT_POLICY
     tiles = zerotile.compact_artifacts(bitops.pack_a(aj, s),
                                        pol.block_m, pol.block_w)
+    want = a.astype(np.int64) @ b
+    for name in api.list_backends():
+        got = api.bitserial_mm(aj, bj, s, t, backend=name, tiles=tiles)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=name)
+
+
+def test_sgt_tiles_kwarg_gated_on_capability():
+    """The tagged SGT 4-tuple rides the same tiles= contract: capable
+    backends consume the word-column remap, incapable ones have the kwarg
+    stripped at dispatch — identical int32 results everywhere."""
+    from repro.kernels import sgt
+
+    s, t = 2, 3
+    a, b = _pair(s, t, m=24, k=256, n=10, seed=22)
+    a[:, 64:192] = 0
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    tiles = sgt.sgt_artifacts(bitops.pack_a(aj, s),
+                              api.DEFAULT_POLICY.block_m)
+    assert tiles[3] == "sgt" and len(tiles) == 4
     want = a.astype(np.int64) @ b
     for name in api.list_backends():
         got = api.bitserial_mm(aj, bj, s, t, backend=name, tiles=tiles)

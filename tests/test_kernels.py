@@ -105,6 +105,12 @@ def _sparse_operand(rng, m, k, pattern, bits):
             out[i * step_m:(i + 1) * step_m, i * step_k:(i + 1) * step_k] = \
                 a[i * step_m:(i + 1) * step_m, i * step_k:(i + 1) * step_k]
         return out
+    if pattern == "power_law":  # few hub columns survive, scattered over K
+        rng2 = np.random.default_rng(k)
+        p = 1.0 / np.arange(1, k + 1) ** 0.7
+        live = rng2.random(k) < p[rng2.permutation(k)]
+        a[:, ~live] = 0
+        return a
     raise ValueError(pattern)
 
 
@@ -209,6 +215,193 @@ def test_precomputed_tiles_match_in_call_jump():
                                   a.astype(np.int64) @ b)
     with pytest.raises(TypeError, match="host int"):
         kops.bitserial_gemm(ap, bp, tiles=(idx, cnt, jnp.int32(s_max)))
+
+
+# ------------------------------------------------- sparse-graph translation
+
+@pytest.mark.parametrize("pattern", ["dense", "banded", "zero_rows",
+                                     "block_diag", "power_law"])
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+@pytest.mark.parametrize("op", ["gemm", "fused"])
+def test_sgt_parity(pattern, bits, op):
+    """Sparse-graph translation — in-call ``jump="sgt"`` AND precomputed
+    ``sgt_artifacts`` tiles — is bit-identical to the dense kernel across
+    sparsity patterns and bitwidths. Translation is never semantic."""
+    from repro.api.policy import DEFAULT_POLICY
+    from repro.kernels import sgt
+
+    rng = np.random.default_rng(hash((pattern, bits, op)) % (2 ** 31))
+    m, k, n = 16, 288, 16
+    a = _sparse_operand(rng, m, k, pattern, bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    tiles = sgt.sgt_artifacts(ap, DEFAULT_POLICY.block_m)
+    assert tiles[3] == "sgt" and isinstance(tiles[2], int)
+    if op == "gemm":
+        want = a.astype(np.int64) @ b
+        got_call = kops.bitserial_gemm(ap, bp, jump="sgt")
+        got_pre = kops.bitserial_gemm(ap, bp, tiles=tiles)
+    else:
+        alpha = jnp.asarray(rng.random((m, 1)) * 0.01, jnp.float32)
+        beta = jnp.asarray(rng.random((1, n)), jnp.float32)
+        want = np.asarray(kops.bitserial_fused(ap, bp, alpha, beta,
+                                               out_bits=4, jump="none"))
+        got_call = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                        jump="sgt")
+        got_pre = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                       tiles=tiles)
+    np.testing.assert_array_equal(np.asarray(got_call), want,
+                                  err_msg=f"in-call sgt {pattern} {bits}b")
+    np.testing.assert_array_equal(np.asarray(got_pre), want,
+                                  err_msg=f"precomputed sgt {pattern} {bits}b")
+
+
+@pytest.mark.parametrize("op", ["bgemm", "bitserial", "fused"])
+def test_sgt_degenerate_graphs(op):
+    """Degenerate adjacencies must not collapse the SGT grid (the PR 4
+    ``s_max >= 1`` clamp class of bugs): all-zero A (remap count 0 ->
+    grid clamps to one masked step), a single live word column, and empty
+    row windows all produce initialized, exact outputs."""
+    from repro.api.policy import DEFAULT_POLICY
+    from repro.kernels import sgt
+
+    bm = DEFAULT_POLICY.block_m
+    m, k, n, bits = 16, 160, 12, 2
+    rng = np.random.default_rng(23)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    cases = {}
+    cases["all_zero"] = np.zeros((m, k), np.int32)
+    single = np.zeros((m, k), np.int32)  # one live word column (col 64..95)
+    single[:, 64:96] = rng.integers(0, 1 << bits, (m, 32))
+    cases["single_word"] = single
+    empty_rows = rng.integers(0, 1 << bits, (m, k)).astype(np.int32)
+    empty_rows[:bm] = 0  # first row WINDOW entirely empty (count 0)
+    cases["empty_row_windows"] = empty_rows
+    for name, a in cases.items():
+        ap = bitops.pack_a(jnp.asarray(a), bits if op != "bgemm" else 1)
+        if op == "bgemm":
+            a1 = (a > 0).astype(np.int32)
+            ap = bitops.pack_a(jnp.asarray(a1), 1)
+            bp1 = bitops.pack_b(jnp.asarray((b > 0).astype(np.int32)), 1)
+            tiles = sgt.sgt_artifacts(ap, bm)
+            if name == "all_zero":
+                assert tiles[2] == 0  # true max count: the clamp's trigger
+            got = kops.bgemm(ap[0], bp1[0], tiles=tiles)
+            got2 = kops.bgemm(ap[0], bp1[0], jump="sgt")
+            want = a1 @ (b > 0).astype(np.int32)
+        elif op == "bitserial":
+            bp = bitops.pack_b(jnp.asarray(b), bits)
+            tiles = sgt.sgt_artifacts(ap, bm)
+            got = kops.bitserial_gemm(ap, bp, tiles=tiles)
+            got2 = kops.bitserial_gemm(ap, bp, jump="sgt")
+            want = a.astype(np.int64) @ b
+        else:
+            bp = bitops.pack_b(jnp.asarray(b), bits)
+            alpha = jnp.ones((m, 1), jnp.float32)
+            beta = jnp.full((1, n), 2.0, jnp.float32)
+            tiles = sgt.sgt_artifacts(ap, bm)
+            got = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                       tiles=tiles)
+            got2 = kops.bitserial_fused(ap, bp, alpha, beta, out_bits=4,
+                                        jump="sgt")
+            want = np.asarray(kops.bitserial_fused(ap, bp, alpha, beta,
+                                                   out_bits=4, jump="none"))
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{op} {name} precomputed")
+        np.testing.assert_array_equal(np.asarray(got2), want,
+                                      err_msg=f"{op} {name} in-call")
+
+
+def test_sgt_translation_artifacts_contract():
+    """The remap IS the translation: scattering the condensed blocks back
+    reproduces the packed operand exactly (no nonzero word unmapped), the
+    gathered tails are zero, and word occupancy matches a per-word check."""
+    from repro.kernels import sgt
+
+    rng = np.random.default_rng(31)
+    m, k, n, bits, tm = 24, 320, 10, 3, 8
+    a = _sparse_operand(rng, m, k, "power_law", bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    wocc = np.asarray(sgt.word_occupancy(ap, tm))
+    apn = np.asarray(ap)
+    mt, w = wocc.shape
+    want_occ = (apn.reshape(bits, mt, tm, w) != 0).any(axis=(0, 2))
+    np.testing.assert_array_equal(wocc, want_occ.astype(np.int32))
+    idx, cnt, s_w, kind = sgt.sgt_artifacts(ap, tm)
+    assert kind == "sgt" and s_w == int(np.asarray(cnt).max())
+    a_cond, b_gath = sgt.condense(ap, bp, idx, cnt, tm)
+    a_cond, b_gath = np.asarray(a_cond), np.asarray(b_gath)
+    idx, cnt = np.asarray(idx), np.asarray(cnt)
+    bpn = np.asarray(bp)
+    scat = np.zeros_like(apn.reshape(bits, mt, tm, w))
+    for i in range(mt):
+        c = int(cnt[i])
+        # condensed A/gathered B columns are exactly the live words, in
+        # ascending word order, tails zero
+        win = apn.reshape(bits, mt, tm, w)[:, i]  # (s, tm, w)
+        np.testing.assert_array_equal(a_cond[:, i, :, :c],
+                                      win[:, :, idx[i, :c]])
+        np.testing.assert_array_equal(b_gath[:, i, :c], bpn[:, idx[i, :c]])
+        assert not a_cond[:, i, :, c:].any()
+        assert not b_gath[:, i, c:].any()
+        scat[:, i][:, :, idx[i, :c]] = a_cond[:, i, :, :c]
+    # scatter-back is lossless: every nonzero word was translated
+    np.testing.assert_array_equal(scat.reshape(apn.shape), apn)
+
+
+def test_occupancy_short_circuits_compact_recompute(monkeypatch):
+    """Documented precedence tiles > occupancy > recompute, enforced:
+    ``jump="compact"`` with a precomputed ``occupancy=`` derives the
+    compact indices FROM it — the plane OR-reduction never runs; with
+    ``tiles=`` no occupancy work runs at all. Counted via monkeypatch at
+    trace time (unique shapes force a fresh jit trace)."""
+    from repro.api.policy import DEFAULT_POLICY
+
+    bm, bw = DEFAULT_POLICY.block_m, DEFAULT_POLICY.block_w
+    m, k, n, bits = 24, 352, 20, 2  # shapes unique to this test
+    rng = np.random.default_rng(41)
+    a = _sparse_operand(rng, m, k, "banded", bits)
+    b = rng.integers(0, 1 << bits, (k, n)).astype(np.int32)
+    ap = bitops.pack_a(jnp.asarray(a), bits)
+    bp = bitops.pack_b(jnp.asarray(b), bits)
+    apad = bitops.pad_to(bitops.pad_to(ap, 1, bm), 2, bw)
+    occ = zerotile.tile_occupancy_planes(apad, bm, bw)
+    tiles = zerotile.compact_artifacts(ap, bm, bw)
+    want = a.astype(np.int64) @ b
+
+    calls = {"n": 0}
+    orig = zerotile.tile_occupancy_planes
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(zerotile, "tile_occupancy_planes", counting)
+    got = kops.bitserial_gemm(ap, bp, jump="compact", occupancy=occ)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert calls["n"] == 0, "occupancy= given, but planes were re-reduced"
+    got = kops.bitserial_gemm(ap, bp, tiles=tiles)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert calls["n"] == 0, "tiles= given, but occupancy work ran"
+    # control: with nothing precomputed the reduction genuinely runs
+    got = kops.bitserial_gemm(ap, bp, jump="compact")
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert calls["n"] == 1
+
+
+def test_tile_occupancy_planes_single_plane_short_circuit():
+    """s == 1 skips the cross-plane OR entirely but stays exact."""
+    rng = np.random.default_rng(43)
+    a = _rand_binary(rng, 32, 256, 0.1)
+    ap = bitops.pack_a(jnp.asarray(a), 1)
+    ap = bitops.pad_to(bitops.pad_to(ap, 1, 8), 2, 4)
+    one = zerotile.tile_occupancy_planes(ap, 8, 4)
+    np.testing.assert_array_equal(np.asarray(one),
+                                  np.asarray(zerotile.tile_occupancy(
+                                      ap[0], 8, 4)))
 
 
 def test_zero_tile_occupancy_and_compaction():

@@ -230,12 +230,160 @@ def test_serve_compact_tiles_consumed_and_bit_identical(setup, monkeypatch):
     np.testing.assert_array_equal(lg1, lg_dense)
     # the compact grid really was sized below the full tile-grid bound
     entry = next(iter(srv.cache._entries.values()))
-    t_idx, t_cnt, s_max = srv._jump_tiles(entry)
+    t_idx, t_cnt, s_max, t_kind = srv._jump_tiles(entry)
     assert t_idx is not None and 0 < s_max <= entry.compact_idx.shape[1]
-    assert entry.s_max <= s_max
+    assert entry.s_max <= s_max and t_kind == "compact"
     # and a jump-incapable backend silently serves dense (no tiles)
     plain = GNNServer(qparams, cfg, policy=pol)  # default backend: xla_dot
-    assert plain._jump_tiles(entry) == (None, None, 0)
+    assert plain._jump_tiles(entry) == (None, None, 0, None)
+
+
+def test_serve_sgt_tiles_consumed_and_bit_identical(setup, monkeypatch):
+    """Under ``jump="sgt"`` the jitted forward consumes the cached
+    word-column remap (TileEntry.sgt_idx/sgt_counts): logits bit-identical
+    to dense, the translation built ONCE per subgraph (at entry build, not
+    per call), and resident-bytes accounting flows into ServeStats."""
+    from repro import api
+    from repro.kernels import sgt
+
+    data, parts, cfg, qparams = setup
+    b = batching.make_batches(data, parts, 2, shuffle=False)[0]
+
+    dense = GNNServer(qparams, cfg, backend="pallas")
+    _, lg_dense = dense.infer_batch(b, return_logits=True)
+
+    calls = {"n": 0}
+    orig = sgt.word_occupancy
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(sgt, "word_occupancy", counting)
+    pol = api.ExecutionPolicy(jump="sgt")
+    srv = GNNServer(qparams, cfg, backend="pallas", policy=pol)
+    _, lg1 = srv.infer_batch(b, return_logits=True)   # miss: builds entry
+    _, lg2 = srv.infer_batch(b, return_logits=True)   # hit: cached remap
+    assert srv.cache.misses == 1 and srv.cache.hits == 1
+    # exactly one translation: _build_entry on the miss; the jitted
+    # forward consumed the artifacts, never re-deriving them in-call
+    assert calls["n"] == 1
+    np.testing.assert_array_equal(lg1, lg2)
+    np.testing.assert_array_equal(lg1, lg_dense)
+    entry = next(iter(srv.cache._entries.values()))
+    t_idx, t_cnt, s_max, t_kind = srv._jump_tiles(entry)
+    assert t_kind == "sgt" and t_idx is not None
+    assert 0 < s_max <= entry.sgt_idx.shape[1]
+    assert entry.sgt_w <= s_max  # pow2 rounding never shrinks the grid
+    # the remap is block_m-keyed: a block_w-retuned policy still consumes
+    # it, a block_m-changed one must not (wrong row windows)
+    assert srv._jump_tiles(entry, api.ExecutionPolicy(
+        jump="sgt", block_w=8))[3] == "sgt"
+    assert srv._jump_tiles(entry, api.ExecutionPolicy(
+        jump="sgt", block_m=16)) == (None, None, 0, None)
+    # resident-bytes accounting reached the stats snapshot
+    assert srv.stats.cache_resident_bytes == srv.cache.resident_bytes > 0
+    # a jump-incapable backend silently serves dense (no sgt tiles)
+    plain = GNNServer(qparams, cfg, policy=pol)  # default: xla_dot
+    assert plain._jump_tiles(entry) == (None, None, 0, None)
+
+
+def test_compose_entries_sgt_matches_scratch(setup):
+    """A coalesced batch's SGT remap composed from per-subgraph cached
+    entries (word-offset shifting) is bit-identical to building the
+    translation from the full block-diagonal adjacency."""
+    from repro.serve.cache import compose_entries
+
+    data, parts, cfg, qparams = setup
+    srv = GNNServer(qparams, cfg, backend="pallas")
+    tm, tw = srv._tile_shape
+    align = srv._align
+    rng = np.random.default_rng(5)
+    sizes = [align, 2 * align]
+    adjs = [jnp.asarray((rng.random((s, s)) < 0.08).astype(np.int32))
+            for s in sizes]
+    entries = [srv._build_entry(a) for a in adjs]
+    offsets = [0, align]
+    n_pad = sum(sizes)
+    composed = compose_entries(entries, offsets, n_pad, tm, tw)
+    full = jnp.zeros((n_pad, n_pad), jnp.int32)
+    for a, off in zip(adjs, offsets):
+        full = full.at[off:off + a.shape[0], off:off + a.shape[0]].set(a)
+    scratch = srv._build_entry(full)
+    for f in ("sgt_idx", "sgt_counts", "compact_idx", "compact_counts",
+              "a_packed", "occupancy"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(composed, f)),
+            np.asarray(getattr(scratch, f)), err_msg=f)
+    assert composed.sgt_w == scratch.sgt_w
+    assert composed.s_max == scratch.s_max
+    # entries built before SGT existed (sgt_idx=None) degrade the batch:
+    # composition carries no remap rather than a wrong one
+    import dataclasses
+    legacy = dataclasses.replace(entries[0], sgt_idx=None, sgt_counts=None,
+                                 sgt_w=0)
+    degraded = compose_entries([legacy, entries[1]], offsets, n_pad, tm, tw)
+    assert degraded.sgt_idx is None and degraded.sgt_counts is None
+
+
+# ------------------------------------------------------- tile cache bounds
+
+def test_tile_cache_bytes_lru_bound(setup):
+    """``cache_bytes=`` is a strict resident-bytes LRU bound: eviction
+    pops least-recently-used first until bytes fit, ``get`` refreshes
+    recency, replacing a key deducts the old entry, and a single entry
+    larger than the bound is itself evicted (the bound is never blown)."""
+    from repro.serve.cache import TileCache
+
+    data, parts, cfg, qparams = setup
+    srv = GNNServer(qparams, cfg, backend="pallas")
+    e_small = srv._build_entry(jnp.eye(128, dtype=jnp.int32))
+    e_big = srv._build_entry(jnp.eye(256, dtype=jnp.int32))
+    nb_s, nb_b = e_small.nbytes(), e_big.nbytes()
+    assert 0 < nb_s < nb_b
+
+    c = TileCache(capacity=16, cache_bytes=3 * nb_s)
+    c.put("a", e_small)
+    c.put("b", e_small)
+    c.put("c", e_small)
+    assert len(c) == 3 and c.resident_bytes == 3 * nb_s
+    assert c.get("a") is e_small  # refresh "a": "b" is now LRU
+    c.put("d", e_small)           # over budget -> evict "b"
+    assert set(c._entries) == {"a", "c", "d"}
+    assert c.resident_bytes == 3 * nb_s and c.evictions == 1
+    c.put("a", e_small)           # same key: replace, no eviction
+    assert c.resident_bytes == 3 * nb_s and c.evictions == 1
+    assert nb_b > 3 * nb_s        # the 256-node adjacency alone > budget
+    c.put("big", e_big)           # evicts LRU-first, then big itself
+    assert len(c) == 0 and c.resident_bytes == 0
+    c.put("a", e_small)
+    assert c.resident_bytes == nb_s
+    c.clear()
+    assert c.resident_bytes == 0 and len(c) == 0
+
+    # an entry alone above the bound never pins over-budget residency
+    tiny = TileCache(capacity=16, cache_bytes=nb_s // 2)
+    tiny.put("x", e_small)
+    assert len(tiny) == 0 and tiny.resident_bytes == 0
+    with pytest.raises(ValueError, match="cache_bytes"):
+        TileCache(capacity=4, cache_bytes=0)
+
+
+def test_server_cache_bytes_plumbs_through(setup):
+    """GNNServer(cache_bytes=) bounds the live cache and the stats
+    snapshot tracks residency under eviction pressure."""
+    data, parts, cfg, qparams = setup
+    probe = GNNServer(qparams, cfg, backend="pallas")
+    batches = batching.make_batches(data, parts, 2, shuffle=False)[:2]
+    e = probe._build_entry(
+        jnp.zeros((batches[0].n_nodes, batches[0].n_nodes), jnp.int32))
+    budget = int(e.nbytes() * 1.5)  # roughly one batch entry resident
+    srv = GNNServer(qparams, cfg, backend="pallas", cache_bytes=budget)
+    for b in batches:
+        srv.infer_batch(b)
+    assert srv.cache.cache_bytes == budget
+    assert srv.cache.resident_bytes <= budget
+    assert srv.stats.cache_resident_bytes == srv.cache.resident_bytes
 
 
 # -------------------------------------------------------------- serve stats

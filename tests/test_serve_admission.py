@@ -272,7 +272,7 @@ def test_mismatched_ambient_grid_drops_cached_tiles(setup):
     entry = srv._build_entry(jax.numpy.eye(128, dtype=jax.numpy.int32))
     with api.use("pallas", policy=api.ExecutionPolicy(jump="compact",
                                                       block_m=16)):
-        assert srv._jump_tiles(entry) == (None, None, 0)
+        assert srv._jump_tiles(entry) == (None, None, 0, None)
     with api.use("pallas", policy=api.ExecutionPolicy(jump="compact")):
         assert srv._jump_tiles(entry)[0] is not None
 

@@ -229,6 +229,51 @@ def test_gnnserver_resolves_bucket_policies_from_table():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_gnnserver_tuned_sgt_policy_bit_identical():
+    """A tuning table that picked ``jump="sgt"`` per bucket serves with
+    the translated kernels: logits bit-identical to the untuned server,
+    every resolved bucket policy is SGT, and the jit cache stays bounded
+    by the bucket ladder (the acceptance contract for tuned-SGT serving)."""
+    from repro.graph import datasets, partition
+    from repro.models import gnn
+    from repro.serve import GNNServer, SubgraphRequest
+    from repro.serve.queue import buckets_for, requests_from_partitions
+    import jax
+
+    data = datasets.load("ogbn-arxiv", scale=0.004, seed=0)
+    parts = partition.partition(data.csr, 4)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes)
+    qparams = gnn.quantize_params(
+        gnn.init_params(jax.random.PRNGKey(0), cfg), cfg)
+    reqs = requests_from_partitions(data, parts)
+    buckets = buckets_for(reqs, levels=2)
+    table = TuningTable([
+        TableEntry(op="serve_forward", bits=8, sparsity_band=0.8,
+                   shape_bucket=(b.n_pad, b.n_pad, cfg.in_dim),
+                   policy=ExecutionPolicy(jump="sgt"), backend="pallas")
+        for b in buckets])
+
+    def run(server):
+        ids = [server.submit(SubgraphRequest(edges=r.edges,
+                                             features=r.features,
+                                             n_nodes=r.n_nodes))
+               for r in reqs]
+        out = server.drain(return_logits=True)
+        return [out[i][1] for i in ids]
+
+    tuned = GNNServer(qparams, cfg, backend="pallas", buckets=buckets,
+                      tuning_table=table)
+    plain = GNNServer(qparams, cfg, backend="pallas", buckets=buckets,
+                      tuning_table=None)
+    lg_tuned, lg_plain = run(tuned), run(plain)
+    pols = tuned.tuned_policies()
+    assert pols and all(p is not None and p["jump"] == "sgt"
+                        for p in pols.values())
+    assert 0 < tuned.n_compiles <= len(buckets)
+    for got, want in zip(lg_tuned, lg_plain):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_gnnserver_survives_missing_table_file(tmp_path):
     from repro.models import gnn
     from repro.serve import GNNServer
