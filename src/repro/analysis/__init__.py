@@ -1,0 +1,26 @@
+"""repro.analysis — contract lint + abstract-trace layer.
+
+QGTC's invariants are invisible to the type system: bit-exact integer
+kernel paths, host-only jit statics, grid-locked tile artifacts,
+capability-gated ``tiles=`` stripping.  This package machine-checks them:
+
+  engine.py  — AST lint core: file walking, inline waivers
+               (``# lint: allow[rule-id]``), baseline suppression
+  rules/     — one module per contract (kernel int purity, sharding
+               layering + axis declaration, benchmark timer sync, api
+               dispatch bypass, serve jit statics, policy grid validity)
+  trace.py   — jaxpr-level checker: integer purity per backend per bit
+               width, ``tiles=`` tag/arity/host-scalar conformance,
+               ExecutionPolicy validity at linter-found sites
+
+Front door: ``python -m repro.launch.lint [--strict] [--baseline F]
+[--trace] [--json]``; rule catalog and workflow in docs/analysis.md.
+"""
+from repro.analysis.engine import (DEFAULT_SCAN_ROOTS, REPO_ROOT, Finding,
+                                   LintResult, Rule, baseline_payload,
+                                   load_baseline, run_lint,
+                                   split_by_baseline)
+
+__all__ = ["Finding", "LintResult", "Rule", "run_lint", "load_baseline",
+           "baseline_payload", "split_by_baseline", "REPO_ROOT",
+           "DEFAULT_SCAN_ROOTS"]

@@ -1,0 +1,229 @@
+"""Core of the contract lint engine: path-scoped AST rules over the repo.
+
+QGTC's correctness rests on invariants the type system cannot see —
+bit-exact integer kernel paths, host-only scalars feeding jit-static
+arguments, tile grids baked into precomputed artifacts, capability-gated
+``tiles=`` stripping.  Each rule here is a small AST visitor scoped to the
+layer whose contract it guards (see ``repro.analysis.rules``); this module
+owns the machinery every rule shares:
+
+  * file discovery + parsing (one ``ast.parse`` per file, shared by all
+    applicable rules),
+  * inline waivers — a ``# lint: allow[rule-id]`` comment suppresses that
+    rule on its line; a STANDALONE waiver comment covers the next line;
+    either way, when the covered line is a ``def``/``class`` header the
+    waiver extends over the whole body (used for the §4.5
+    fused-requantize epilogue, which is float BY DESIGN inside an
+    otherwise integer kernel module),
+  * baseline files — a JSON list of findings to suppress during
+    incremental adoption.  Baseline identity is ``(rule, path, message)``,
+    deliberately NOT the line number: unrelated edits move lines, and a
+    baseline that rots on every reflow teaches people to regenerate it
+    blindly.
+
+Rules match on repo-relative POSIX paths (``src/repro/kernels/...``), so
+a fixture tree that mirrors the layout under any root lints identically —
+that is how tests/test_analysis.py exercises known-bad code without
+planting it in the real tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+
+__all__ = ["REPO_ROOT", "DEFAULT_SCAN_ROOTS", "Finding", "LintResult",
+           "Rule", "run_lint", "lint_file", "iter_py_files", "waived_lines",
+           "load_baseline", "baseline_payload", "split_by_baseline"]
+
+# src/repro/analysis/engine.py -> analysis -> repro -> src -> repo root
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+# tests/ is deliberately absent: tests exercise invalid constructions on
+# purpose (bad policies, tiles with non-host scalars) and the fixture tree
+# under tests/fixtures/analysis/ IS known-bad code.
+DEFAULT_SCAN_ROOTS = ("src/repro", "benchmarks", "examples", "tools")
+
+_WAIVER_RE = re.compile(r"lint:\s*allow\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str        # repo-relative POSIX path
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> tuple:
+        """Baseline/suppression identity (line-number free, see module doc)."""
+        return (self.rule, self.path, self.message)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """A named contract check. Subclasses set ``name``/``description`` and
+    implement ``applies_to`` (path scoping) + ``check`` (AST walk)."""
+
+    name: str = ""
+    description: str = ""
+
+    def applies_to(self, path: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, path: str, tree: ast.AST, lines: list) -> list:
+        raise NotImplementedError
+
+    def finding(self, path: str, node, message: str) -> Finding:
+        return Finding(self.name, path, getattr(node, "lineno", 0),
+                       getattr(node, "col_offset", 0), message)
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list
+    files: int
+
+    def to_dict(self) -> dict:
+        return {"files": self.files,
+                "findings": [f.to_dict() for f in self.findings]}
+
+
+def waived_lines(tree: ast.AST, lines: list) -> dict:
+    """rule name (or ``*``) -> set of line numbers covered by a waiver.
+
+    A trailing waiver covers its own line; a standalone comment waiver
+    covers the next line.  When the covered line is a ``def``/``class``
+    header the waiver extends over the whole body — the idiom for "this
+    function is the sanctioned exception" (e.g. the fused epilogue in
+    kernels/bitserial.py)."""
+    span_end = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            span_end[node.lineno] = node.end_lineno or node.lineno
+    waived: dict = {}
+    for i, text in enumerate(lines, 1):
+        m = _WAIVER_RE.search(text)
+        if not m:
+            continue
+        target = i
+        if text.lstrip().startswith("#"):
+            # standalone waiver: covers the next code line (skipping the
+            # rest of its own comment block and blank lines)
+            target = i + 1
+            while target <= len(lines) and (
+                    not lines[target - 1].strip()
+                    or lines[target - 1].lstrip().startswith("#")):
+                target += 1
+        end = span_end.get(target, target)
+        for rule in m.group(1).split(","):
+            waived.setdefault(rule.strip(), set()).update(range(target,
+                                                                end + 1))
+    return waived
+
+
+def iter_py_files(paths):
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def rel_path(path, rel_root=None) -> str:
+    """Repo-relative POSIX path; an explicit ``rel_root`` (fixture trees)
+    takes precedence so mirrored layouts scope identically."""
+    p = pathlib.Path(path).resolve()
+    for base in (rel_root, REPO_ROOT):
+        if base is None:
+            continue
+        try:
+            return p.relative_to(pathlib.Path(base).resolve()).as_posix()
+        except ValueError:
+            continue
+    return p.as_posix()
+
+
+def lint_file(path, rules, rel_root=None) -> list:
+    rel = rel_path(path, rel_root)
+    applicable = [r for r in rules if r.applies_to(rel)]
+    if not applicable:
+        return []
+    src = pathlib.Path(path).read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("syntax-error", rel, e.lineno or 0, e.offset or 0,
+                        f"file does not parse: {e.msg}")]
+    lines = src.splitlines()
+    waived = waived_lines(tree, lines)
+    out = []
+    for rule in applicable:
+        skip = waived.get(rule.name, set()) | waived.get("*", set())
+        out.extend(f for f in rule.check(rel, tree, lines)
+                   if f.line not in skip)
+    return out
+
+
+def run_lint(paths=None, rules=None, rel_root=None) -> LintResult:
+    """Lint ``paths`` (default: the repo scan roots) under ``rules``
+    (default: the full registry)."""
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = ALL_RULES
+    if paths is None:
+        paths = [REPO_ROOT / p for p in DEFAULT_SCAN_ROOTS]
+    findings, files = [], 0
+    for f in iter_py_files(paths):
+        files += 1
+        findings.extend(lint_file(f, rules, rel_root))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintResult(findings=findings, files=files)
+
+
+# ------------------------------------------------------------------ baseline
+
+def baseline_payload(findings) -> dict:
+    """Serializable baseline for the given findings (deduped, sorted)."""
+    keys = sorted({f.key() for f in findings})
+    return {"version": 1,
+            "findings": [{"rule": r, "path": p, "message": m}
+                         for r, p, m in keys]}
+
+
+def load_baseline(path) -> list:
+    data = json.loads(pathlib.Path(path).read_text())
+    if data.get("version") != 1:
+        raise ValueError(f"unsupported baseline version in {path}: "
+                         f"{data.get('version')!r} (expected 1)")
+    out = []
+    for e in data.get("findings", ()):
+        missing = {"rule", "path", "message"} - set(e)
+        if missing:
+            raise ValueError(f"baseline entry missing {sorted(missing)}: {e}")
+        out.append((e["rule"], e["path"], e["message"]))
+    return out
+
+
+def split_by_baseline(findings, baseline):
+    """Partition findings against a baseline.
+
+    Returns ``(new, suppressed, stale)``: findings not covered by the
+    baseline, findings it suppresses, and baseline entries that matched
+    nothing (the violation was fixed — the entry should be deleted; under
+    ``--strict`` stale entries fail the run so baselines cannot rot)."""
+    pinned = set(baseline)
+    new = [f for f in findings if f.key() not in pinned]
+    suppressed = [f for f in findings if f.key() in pinned]
+    live = {f.key() for f in findings}
+    stale = [k for k in baseline if k not in live]
+    return new, suppressed, stale

@@ -1,0 +1,36 @@
+"""Rule registry for the contract lint engine.
+
+One instance per rule, ordered roughly by the layer they guard (kernels ->
+dist -> perf -> dispatch -> serve -> policy).  ``repro.launch.lint
+--list-rules`` prints this catalog; docs/analysis.md documents each rule's
+rationale and how to add a new one.
+"""
+from __future__ import annotations
+
+from repro.analysis.rules.dispatch import DispatchBypass
+from repro.analysis.rules.jit_static import JitStaticArgs
+from repro.analysis.rules.kernel_purity import KernelIntPurity
+from repro.analysis.rules.policy_sites import PolicyGridValidity
+from repro.analysis.rules.sharding_layers import (ShardingAxisDeclared,
+                                                  ShardingSpecLayering)
+from repro.analysis.rules.timers import TimerSync
+
+__all__ = ["ALL_RULES", "get_rule"]
+
+ALL_RULES = (
+    KernelIntPurity(),
+    ShardingSpecLayering(),
+    ShardingAxisDeclared(),
+    TimerSync(),
+    DispatchBypass(),
+    JitStaticArgs(),
+    PolicyGridValidity(),
+)
+
+
+def get_rule(name: str):
+    for rule in ALL_RULES:
+        if rule.name == name:
+            return rule
+    raise KeyError(f"unknown lint rule {name!r}; "
+                   f"known: {[r.name for r in ALL_RULES]}")

@@ -1,0 +1,131 @@
+"""serve-jit-static: jit static args in serve/ must be host-safe values.
+
+The serving forward is jitted once with
+``static_argnames=("s_max", "t_kind", "pol")`` (serve/engine.py): the
+tile-grid bound, the tiles kind tag and the frozen ExecutionPolicy are
+COMPILE-TIME constants — each distinct value is a cache entry and a
+recompile.  Passing a traced/array value in a static slot either crashes
+(unhashable ndarray) or, worse, a device scalar silently round-trips
+through host sync per call — the dispatch-time-latency bug PR 6 fixed by
+forcing ``s_max = int(jnp.max(counts))`` at artifact-build time.
+
+The rule resolves each ``jax.jit(fn, static_argnames=...)`` in a serve
+module against ``fn``'s def (same file), maps static names to positional
+slots, and checks every call site of the jitted binding: the expression
+in a static slot must be a host-safe form — a name/attribute chain, a
+constant, a subscript, or a call to a small builtin set (int/str/bool/
+min/max/len/tuple).  Anything array-producing (``jnp.*`` calls, arithmetic
+on arrays, method calls) is flagged.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Rule
+
+_SCOPE = re.compile(r"(^|/)repro/serve/[^/]*\.py$")
+_HOST_BUILTINS = {"int", "str", "bool", "min", "max", "len", "tuple"}
+
+
+def _host_safe(node) -> bool:
+    if isinstance(node, (ast.Name, ast.Constant)):
+        return True
+    if isinstance(node, ast.Attribute):
+        return _host_safe(node.value)
+    if isinstance(node, ast.Subscript):
+        return _host_safe(node.value)
+    if isinstance(node, ast.Tuple):
+        return all(_host_safe(e) for e in node.elts)
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in _HOST_BUILTINS):
+        return all(_host_safe(a) for a in node.args)
+    return False
+
+
+def _static_names(call) -> list:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)]
+    return []
+
+
+def _bind_name(assign) -> str:
+    """Name the jit result is bound to (``_fwd`` for ``self._fwd = ...``)."""
+    for t in assign.targets:
+        if isinstance(t, ast.Name):
+            return t.id
+        if isinstance(t, ast.Attribute):
+            return t.attr
+    return ""
+
+
+class JitStaticArgs(Rule):
+    name = "serve-jit-static"
+    description = ("call sites of serve-layer jitted functions must pass "
+                   "host-safe values (names/constants/host builtins) in "
+                   "static_argnames slots — arrays there are unhashable or "
+                   "force a per-call device sync")
+
+    def applies_to(self, path: str) -> bool:
+        return bool(_SCOPE.search(path))
+
+    def check(self, path, tree, lines):
+        defs = {n.name: n for n in ast.walk(tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        # jitted binding name -> {static name: positional slot}
+        jitted: dict = {}
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            call = node.value
+            fn = call.func
+            is_jit = (isinstance(fn, ast.Attribute) and fn.attr == "jit") \
+                or (isinstance(fn, ast.Name) and fn.id == "jit")
+            if not is_jit or not call.args:
+                continue
+            statics = _static_names(call)
+            target = call.args[0]
+            if not (statics and isinstance(target, ast.Name)
+                    and target.id in defs):
+                continue
+            params = [a.arg for a in defs[target.id].args.posonlyargs
+                      + defs[target.id].args.args]
+            slots = {s: params.index(s) for s in statics if s in params}
+            bind = _bind_name(node)
+            if bind:
+                jitted[bind] = slots
+        if not jitted:
+            return []
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            callee = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            slots = jitted.get(callee)
+            if not slots:
+                continue
+            for sname, idx in slots.items():
+                expr = None
+                if idx < len(node.args):
+                    expr = node.args[idx]
+                else:
+                    for kw in node.keywords:
+                        if kw.arg == sname:
+                            expr = kw.value
+                if expr is not None and not _host_safe(expr):
+                    out.append(self.finding(
+                        path, expr,
+                        f"static arg {sname!r} of jitted {callee!r} gets a "
+                        f"non-host-safe expression "
+                        f"({ast.unparse(expr)}) — statics must be "
+                        f"hashable host values, not arrays/computations"))
+        return out

@@ -1,0 +1,106 @@
+"""policy-grid: ExecutionPolicy construction sites must build valid grids.
+
+``ExecutionPolicy.__post_init__`` validates the tile grid (block_m % 8,
+block_n % 128, positive blocks, known jump/mode) — but only at RUNTIME,
+on whatever code path actually constructs the policy.  A bad literal in a
+rarely-exercised branch (an example, a benchmark arm, a serve bucket
+override) ships broken and explodes at a user.  This rule finds every
+``ExecutionPolicy(...)`` call and every ``DEFAULT_POLICY.replace(...)``
+whose keyword arguments are all literals, constructs the policy at lint
+time, and reports the ValueError with the offending file:line.
+
+Sites with non-literal arguments (config-driven candidates, sweep grids)
+cannot be evaluated statically; ``collect_sites`` still records them so
+the abstract-trace checker (repro.analysis.trace) can report coverage —
+lint-validated vs dynamic — and the sweep's rejection path tags each
+dynamic rejection with its config source (tune/sweep.py).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import (DEFAULT_SCAN_ROOTS, REPO_ROOT, Rule,
+                                   iter_py_files, rel_path)
+
+_EXEMPT = re.compile(r"(^|/)tests/")
+
+
+def _literal_kwargs(call):
+    """kwargs dict if every argument is a plain literal, else None."""
+    if call.args:
+        return None
+    kwargs = {}
+    for kw in call.keywords:
+        if kw.arg is None or not isinstance(kw.value, ast.Constant):
+            return None
+        kwargs[kw.arg] = kw.value.value
+    return kwargs
+
+
+def _policy_calls(tree):
+    """Yield (node, kind) for ExecutionPolicy(...) and
+    DEFAULT_POLICY.replace(...) calls; kind is 'construct' | 'replace'."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name == "ExecutionPolicy":
+            yield node, "construct"
+        elif (name == "replace" and isinstance(fn, ast.Attribute)
+              and isinstance(fn.value, ast.Name)
+              and fn.value.id == "DEFAULT_POLICY"):
+            yield node, "replace"
+
+
+def collect_sites(paths=None, rel_root=None) -> list:
+    """All policy construction sites under ``paths`` (default scan roots).
+
+    Returns ``[{path, line, kind, kwargs}]``; ``kwargs`` is None for
+    dynamic sites the linter cannot evaluate."""
+    if paths is None:
+        paths = [REPO_ROOT / p for p in DEFAULT_SCAN_ROOTS]
+    sites = []
+    for f in iter_py_files(paths):
+        rel = rel_path(f, rel_root)
+        if _EXEMPT.search(rel):
+            continue
+        try:
+            tree = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError:
+            continue
+        for node, kind in _policy_calls(tree):
+            sites.append({"path": rel, "line": node.lineno, "kind": kind,
+                          "kwargs": _literal_kwargs(node)})
+    return sites
+
+
+class PolicyGridValidity(Rule):
+    name = "policy-grid"
+    description = ("every ExecutionPolicy(...) / DEFAULT_POLICY.replace(...)"
+                   " with literal kwargs must construct a valid tile grid; "
+                   "the ValueError surfaces at lint time with file:line")
+
+    def applies_to(self, path: str) -> bool:
+        return path.endswith(".py") and not _EXEMPT.search(path)
+
+    def check(self, path, tree, lines):
+        # late import: keep rule registry import cheap
+        from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
+        out = []
+        for node, kind in _policy_calls(tree):
+            kwargs = _literal_kwargs(node)
+            if kwargs is None:
+                continue  # dynamic site — sweep/trace cover it at runtime
+            try:
+                if kind == "construct":
+                    ExecutionPolicy(**kwargs)
+                else:
+                    DEFAULT_POLICY.replace(**kwargs)
+            except (TypeError, ValueError) as e:
+                out.append(self.finding(
+                    path, node,
+                    f"invalid ExecutionPolicy at construction site: {e}"))
+        return out

@@ -1,0 +1,179 @@
+"""Sharding rules: spec construction stays in dist/, axis names stay declared.
+
+Two contracts:
+
+``sharding-spec-layering`` — models (and everything else outside
+``repro/dist/`` + ``repro/launch/``) must not import or construct
+``jax.sharding.PartitionSpec``/``NamedSharding`` directly.  The whole
+point of the logical-axis layer (docs/dist.md) is that a model file is
+mesh-agnostic: it annotates with logical names and the launcher's rule
+table decides placement.  An ad-hoc ``P("data", ...)`` hard-wires a mesh
+axis the current mesh may not have.  Code that genuinely needs a raw spec
+(``jax.shard_map`` in/out specs) gets it from ``repro.dist.sharding.pspec``
+so the dependency stays visible to this rule.
+
+``sharding-axis-declared`` — every logical axis name a model passes to
+``constrain(...)`` or looks up via ``rules.get("...")`` must appear in
+``repro.dist.sharding.LOGICAL_AXES``.  This is the completeness check
+that used to live as a private AST walker inside
+tests/test_sharding_rules.py; the test now consumes the shared collectors
+below (``constrain_axis_names`` / ``rules_get_names``) and additionally
+asserts each name RESOLVES under every make_rules mode — resolution needs
+make_rules and stays a test, declaration is lintable and lives here.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import pathlib
+import re
+
+from repro.analysis.engine import Rule
+
+_EXEMPT = re.compile(r"(^|/)(repro/(dist|launch)/|tests/)")
+_MODELS = re.compile(r"(^|/)repro/models/[^/]+\.py$")
+_SPEC_NAMES = {"PartitionSpec", "NamedSharding"}
+
+
+# ---------------------------------------------------------- shared collectors
+
+def _parse_dir(models_dir):
+    for fname in sorted(os.listdir(models_dir)):
+        if fname.endswith(".py"):
+            src = pathlib.Path(models_dir, fname).read_text()
+            yield ast.parse(src, filename=fname)
+
+
+def constrain_names_in(tree) -> set:
+    """String literals passed to a ``constrain(...)`` call in one tree."""
+    names = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        callee = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if callee != "constrain":
+            continue
+        for arg in node.args[1:]:
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                names.add(arg.value)
+    return names
+
+
+def rules_get_names_in(tree) -> set:
+    """Logical names looked up directly via ``rules.get("...")``."""
+    names = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "get"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "rules"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)):
+            names.add(node.args[0].value)
+    return names
+
+
+def constrain_axis_names(models_dir) -> set:
+    """Every logical axis name constrain()ed anywhere under models_dir."""
+    names = set()
+    for tree in _parse_dir(models_dir):
+        names |= constrain_names_in(tree)
+    return names
+
+
+def rules_get_names(models_dir) -> set:
+    names = set()
+    for tree in _parse_dir(models_dir):
+        names |= rules_get_names_in(tree)
+    return names
+
+
+# ----------------------------------------------------------------- the rules
+
+class ShardingSpecLayering(Rule):
+    name = "sharding-spec-layering"
+    description = ("no jax.sharding PartitionSpec/NamedSharding import or "
+                   "construction outside repro/dist/ and repro/launch/; "
+                   "use repro.dist.sharding (constrain/named_sharding/pspec)")
+
+    def applies_to(self, path: str) -> bool:
+        return path.endswith(".py") and not _EXEMPT.search(path)
+
+    def check(self, path, tree, lines):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom):
+                if node.module == "jax.sharding":
+                    bad = [a.name for a in node.names
+                           if a.name in _SPEC_NAMES]
+                    if bad:
+                        out.append(self.finding(
+                            path, node,
+                            f"ad-hoc import of {', '.join(bad)} from "
+                            f"jax.sharding; build specs through "
+                            f"repro.dist.sharding (pspec/named_sharding) so "
+                            f"the logical-axis rule tables stay in charge"))
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax.sharding":
+                        out.append(self.finding(
+                            path, node,
+                            "ad-hoc import of jax.sharding; build specs "
+                            "through repro.dist.sharding"))
+            elif (isinstance(node, ast.Attribute)
+                  and node.attr in _SPEC_NAMES
+                  and isinstance(node.value, ast.Attribute)
+                  and node.value.attr == "sharding"):
+                out.append(self.finding(
+                    path, node,
+                    f"ad-hoc jax.sharding.{node.attr} access; build specs "
+                    f"through repro.dist.sharding"))
+        return out
+
+
+class ShardingAxisDeclared(Rule):
+    name = "sharding-axis-declared"
+    description = ("every logical axis name used by models/ (constrain "
+                   "string args, rules.get keys) must be declared in "
+                   "repro.dist.sharding.LOGICAL_AXES")
+
+    def applies_to(self, path: str) -> bool:
+        return bool(_MODELS.search(path))
+
+    def check(self, path, tree, lines):
+        # late import: dist.sharding pulls in jax, rules import must stay
+        # cheap for --list-rules and non-model scans
+        from repro.dist.sharding import LOGICAL_AXES
+        declared = set(LOGICAL_AXES)
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            callee = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None)
+            if callee == "constrain":
+                for arg in node.args[1:]:
+                    if (isinstance(arg, ast.Constant)
+                            and isinstance(arg.value, str)
+                            and arg.value not in declared):
+                        out.append(self.finding(
+                            path, arg,
+                            f"logical axis {arg.value!r} is not declared "
+                            f"in repro.dist.sharding.LOGICAL_AXES — "
+                            f"undeclared names silently resolve to "
+                            f"'replicated' in every mode"))
+            elif (isinstance(fn, ast.Attribute) and fn.attr == "get"
+                  and isinstance(fn.value, ast.Name)
+                  and fn.value.id == "rules" and node.args
+                  and isinstance(node.args[0], ast.Constant)
+                  and isinstance(node.args[0].value, str)
+                  and node.args[0].value not in declared):
+                out.append(self.finding(
+                    path, node.args[0],
+                    f"logical axis {node.args[0].value!r} (rules.get) is "
+                    f"not declared in repro.dist.sharding.LOGICAL_AXES"))
+        return out

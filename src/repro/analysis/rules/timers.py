@@ -1,0 +1,91 @@
+"""bench-timer-sync: a perf_counter stop needs a device sync in scope.
+
+JAX dispatch is asynchronous: ``t = time.perf_counter() - t0`` after an
+un-synced kernel launch times the ENQUEUE, not the compute, and the
+benchmark reports numbers that are off by orders of magnitude (the exact
+failure mode PRs 3-7 kept catching by hand in benchmarks/).  Every timing
+scope in ``benchmarks/`` and ``repro/perf/`` must therefore contain a
+recognized sync point between start and stop:
+
+  * ``block_until_ready`` (jax.block_until_ready or the array method), or
+  * a serving-engine call that syncs internally — ``drain()`` / ``step()``
+    / ``infer_batch()`` all call ``block_until_ready`` on the logits
+    before returning (serve/engine.py `_step_once`).
+
+The check is scope-granular (one function = one scope, nested defs are
+their own scope): a scope that computes a perf_counter delta without any
+sync call in it is flagged.  Helpers that delegate timing entirely (e.g.
+benchmarks/common.timeit -> repro.perf.report.bench_median) contain no
+perf_counter stop and pass trivially.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Rule
+
+_SCOPE = re.compile(r"(^|/)(benchmarks|repro/perf)/[^/]*\.py$")
+
+_SYNC_NAMES = {"block_until_ready", "drain", "step", "infer_batch"}
+
+
+def _is_perf_counter(node) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    return (isinstance(fn, ast.Attribute) and fn.attr == "perf_counter") \
+        or (isinstance(fn, ast.Name) and fn.id == "perf_counter")
+
+
+def _walk_scope(body):
+    """Yield nodes of one scope without descending into nested defs."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class TimerSync(Rule):
+    name = "bench-timer-sync"
+    description = ("in benchmarks/ and repro/perf/, any "
+                   "`perf_counter() - t0` stop must share its scope with a "
+                   "device sync (block_until_ready, or an engine "
+                   "drain/step/infer_batch)")
+
+    def applies_to(self, path: str) -> bool:
+        return bool(_SCOPE.search(path))
+
+    def check(self, path, tree, lines):
+        scopes = [("<module>", tree.body)]
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node.name, node.body))
+        out = []
+        for name, body in scopes:
+            stops, synced = [], False
+            for node in _walk_scope(body):
+                if (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, ast.Sub)
+                        and _is_perf_counter(node.left)):
+                    stops.append(node)
+                elif isinstance(node, ast.Call):
+                    fn = node.func
+                    callee = fn.attr if isinstance(fn, ast.Attribute) else (
+                        fn.id if isinstance(fn, ast.Name) else None)
+                    if callee in _SYNC_NAMES:
+                        synced = True
+            if synced:
+                continue
+            for stop in stops:
+                out.append(self.finding(
+                    path, stop,
+                    f"perf_counter stop in {name!r} with no device sync in "
+                    f"scope — async dispatch means this times the enqueue, "
+                    f"not the compute (add jax.block_until_ready or go "
+                    f"through perf.report.bench_median)"))
+        return out

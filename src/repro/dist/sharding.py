@@ -22,7 +22,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["make_rules", "shard_ctx", "current_ctx", "constrain",
-           "named_sharding", "LOGICAL_AXES"]
+           "named_sharding", "pspec", "LOGICAL_AXES"]
 
 # Every logical axis name the model zoo uses, in one place.  Param axes
 # come from the Initializer annotations in models/{lm,ssm,transformer}.py;
@@ -189,3 +189,16 @@ def named_sharding(mesh, axes, rules) -> NamedSharding:
     """Logical axes tuple -> NamedSharding on `mesh` (no shape knowledge;
     for shape-aware divisibility filtering see launch.steps.param_shardings)."""
     return NamedSharding(mesh, _spec_for(mesh, rules, axes))
+
+
+def pspec(*axes) -> P:
+    """Build a raw PartitionSpec — the one sanctioned constructor outside
+    dist/ and launch/.
+
+    Code that genuinely needs explicit specs (``jax.shard_map`` in/out
+    specs in models/transformer.py's MoE path) imports this instead of
+    ``jax.sharding.PartitionSpec``, so the lint rule
+    ``sharding-spec-layering`` (repro.analysis) can forbid ad-hoc spec
+    construction everywhere else and spec-building stays traceable to the
+    dist layer."""
+    return P(*axes)

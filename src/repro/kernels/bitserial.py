@@ -63,6 +63,9 @@ def _plane_accumulate(a_ref, b_ref, mode):
     return acc
 
 
+# lint: allow[kernel-int-purity] — the §4.5 fused requantize epilogue is
+# the ONE sanctioned float region: rescale+clip happens in f32, the GEMM
+# accumulator stays int32 (repro.analysis.trace proves no float dot_general)
 def _store(acc_ref, o_ref, alpha_ref, beta_ref, *, out_bits, relu):
     """Write the accumulated block; fused §4.5 epilogue when alpha given."""
     if alpha_ref is None:

@@ -236,7 +236,10 @@ def _bitserial_fused_call(a_packed, b_packed, alpha, beta, tiles_idx,
     _, _, n = b_packed.shape
     a = _pad2(a_packed, block_m, block_w, axes=(1, 2))
     b = _pad2(b_packed, block_w, block_n, axes=(1, 2))
+    # the §4.5 epilogue scale/shift operands are float by design
+    # lint: allow[kernel-int-purity]
     al = bitops.pad_to(alpha.astype(jnp.float32).reshape(m, 1), 0, block_m)
+    # lint: allow[kernel-int-purity]
     be = bitops.pad_to(beta.astype(jnp.float32).reshape(1, n), 1, block_n)
     occ, compact, sgt = _bitserial_jump_artifacts(
         a, tiles_idx, tiles_cnt, occupancy, jump, block_m, block_w, s_max,

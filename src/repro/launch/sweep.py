@@ -21,6 +21,7 @@ writes) is preserved.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 
@@ -65,12 +66,15 @@ def main(argv=None) -> dict:
         ap.error("pass exactly one of --smoke or --config")
     if args.smoke:
         config = dict(SMOKE_CONFIG)
+        # candidate rejections point at the literal grid, file:name
+        source = f"{inspect.getsourcefile(run_sweep)}:SMOKE_CONFIG"
     else:
         config = json.loads(pathlib.Path(args.config).read_text())
+        source = str(args.config)
     if args.kernels_only:
         config = {k: v for k, v in config.items() if k != "serve"}
 
-    result = run_sweep(config)
+    result = run_sweep(config, source=source)
     out = result.table.save(args.out)
     if args.bench_out:
         merge_bench(args.bench_out, result.records)

@@ -506,7 +506,7 @@ def moe(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         out = constrain(out, "moe_group", None, None)
         return out.reshape(b, t, d)
 
-    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import pspec as P
 
     mesh, rules = ctx
     dp_spec = dp if len(dp) > 1 else dp[0]

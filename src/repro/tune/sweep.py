@@ -22,8 +22,10 @@ Every candidate is asserted bit-identical against the dense ``xla_dot``
 reference AS it is timed — a sweep doubles as a cross-backend exactness
 gate, exactly like benchmarks/kernel_bench.py. Invalid candidates (e.g. a
 tile grid ExecutionPolicy rejects) are not errors: they are recorded in
-``SweepResult.rejected`` with the construction-time ValueError message,
-so generated candidate grids get fast, legible rejection.
+``SweepResult.rejected`` with the construction-time ValueError message
+prefixed by the offending location (``<config source>:candidates[i]``),
+so generated candidate grids get fast, legible rejection that points back
+at the grid that produced the bad override.
 
 Timed arms also become BENCH_kernels.json-style trajectory records
 (``phase: "sweep"``) so `repro.launch.sweep --bench-out` can merge the
@@ -32,6 +34,7 @@ measurement history into the tracked perf file.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 
 import jax
@@ -89,7 +92,8 @@ SMOKE_CONFIG = {
 class SweepResult:
     table: TuningTable
     records: list        # BENCH-style trajectory records (phase: "sweep")
-    rejected: list       # [{candidate, error}] — invalid policy overrides
+    rejected: list       # [{candidate, source, error}] — invalid overrides,
+                         # error prefixed with the offending source:candidates[i]
 
 
 def _banded(rng, m, k, bits, sparsity):
@@ -116,16 +120,24 @@ def _cells(config):
                     yield op, int(bits), float(band), (m, k, n)
 
 
-def _candidates(raw, rejected):
-    """Validate policy-override dicts; invalid ones -> rejected, legibly."""
+def _candidates(raw, rejected, source="config"):
+    """Validate policy-override dicts; invalid ones -> rejected, legibly.
+
+    ``source`` is the offending location (config path or caller
+    ``file:line``); each candidate is tagged ``{source}:candidates[i]`` so
+    a rejection in a generated grid points back at the construction site,
+    not just at the ValueError text.  Returns ``(override, policy,
+    source_tag)`` triples for the valid candidates."""
     out = []
-    for ov in raw:
+    for i, ov in enumerate(raw):
+        src = f"{source}:candidates[{i}]"
         try:
             pol = DEFAULT_POLICY.replace(**dict(ov))
         except (TypeError, ValueError) as e:
-            rejected.append({"candidate": dict(ov), "error": str(e)})
+            rejected.append({"candidate": dict(ov), "source": src,
+                             "error": f"{src}: {e}"})
             continue
-        out.append((dict(ov), pol))
+        out.append((dict(ov), pol, src))
     return out
 
 
@@ -165,7 +177,7 @@ def _sweep_cell(op, bits, band, shape, backend, cands, iters, warmup,
     tiles_by_grid = {}
     sgt_by_bm = {}
     records, arms = [], []
-    for ov, pol in cands:
+    for ov, pol, _src in cands:
         tiles = None
         if pol.jump == "compact":
             grid = (pol.block_m, pol.block_w)
@@ -211,7 +223,7 @@ def _sweep_cell(op, bits, band, shape, backend, cands, iters, warmup,
 
 # ---------------------------------------------------------------- serve arm
 
-def _sweep_serve(scfg, rejected, log):
+def _sweep_serve(scfg, rejected, log, source="config"):
     """Stream repeat traffic through GNNServer per candidate; the winner
     (by nodes/s, logits asserted bit-identical across candidates) becomes
     one serve_forward entry per shape bucket.
@@ -242,15 +254,15 @@ def _sweep_serve(scfg, rejected, log):
                     DEFAULT_POLICY.block_w)
     arms, records = [], []
     ref_logits = None
-    for ov, pol in _candidates(scfg.get("candidates",
-                                        ({}, {"jump": "compact"})),
-                               rejected):
+    for ov, pol, src in _candidates(scfg.get("candidates",
+                                             ({}, {"jump": "compact"})),
+                                    rejected, source=f"{source}:serve"):
         if (pol.block_m, pol.block_n, pol.block_w) != default_grid:
             rejected.append({
-                "candidate": dict(ov),
-                "error": "serve sweep candidates must keep the default "
-                         "tile grid (the bucket ladder and cache "
-                         "composition are built on it)"})
+                "candidate": dict(ov), "source": src,
+                "error": f"{src}: serve sweep candidates must keep the "
+                         f"default tile grid (the bucket ladder and cache "
+                         f"composition are built on it)"})
             continue
         srv = GNNServer(qparams, cfg, feat_bits=feat_bits, backend=backend,
                         policy=pol, buckets=buckets, tuning_table=None)
@@ -310,11 +322,22 @@ def _sweep_serve(scfg, rejected, log):
 
 # -------------------------------------------------------------------- driver
 
-def run_sweep(config: dict, *, log=print) -> SweepResult:
-    """Measure the config's grid; returns the table + trajectory records."""
+def run_sweep(config: dict, *, log=print, source: str | None = None
+              ) -> SweepResult:
+    """Measure the config's grid; returns the table + trajectory records.
+
+    ``source`` names where the config came from (its JSON path, or e.g.
+    ``".../sweep.py:SMOKE_CONFIG"``) so candidate rejections carry the
+    offending location; when omitted it falls back to ``config["source"]``
+    and then to the caller's ``file:line``."""
+    if source is None:
+        source = config.get("source")
+    if source is None:
+        caller = inspect.stack()[1]
+        source = f"{caller.filename}:{caller.lineno}"
     rejected: list = []
     cands = _candidates(config.get("candidates", DEFAULT_CANDIDATES),
-                        rejected)
+                        rejected, source=source)
     if not cands:
         raise ValueError(
             f"no valid policy candidates in config "
@@ -331,13 +354,13 @@ def run_sweep(config: dict, *, log=print) -> SweepResult:
         records.extend(recs)
     if config.get("serve"):
         serve_entries, serve_recs = _sweep_serve(config["serve"], rejected,
-                                                 log)
+                                                 log, source=source)
         entries.extend(serve_entries)
         records.extend(serve_recs)
     meta = provenance({
         "config": config.get("name", "unnamed"),
         "generated_by": "repro.launch.sweep",
-        "candidates": [dict(ov) for ov, _ in cands],
+        "candidates": [dict(ov) for ov, _, _ in cands],
     })
     table = TuningTable(entries, meta=meta)
     for rej in rejected:

@@ -1,0 +1,9 @@
+"""Lint fixture: perf_counter stop with no device sync in scope —
+times the async enqueue, not the compute."""
+import time
+
+
+def time_enqueue_only(f, x):
+    t0 = time.perf_counter()
+    f(x)
+    return time.perf_counter() - t0

@@ -1,0 +1,6 @@
+"""Lint fixture: direct kernel import bypassing repro.api dispatch."""
+from repro.kernels import ops as kops
+
+
+def run(ap, bp):
+    return kops.bitserial_gemm(ap, bp)

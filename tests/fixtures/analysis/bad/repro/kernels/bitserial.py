@@ -1,0 +1,12 @@
+"""Lint fixture: deliberately float-contaminated integer kernel module.
+
+Never imported — scanned by tests/test_analysis.py to prove the
+kernel-int-purity rule fires on float dtypes, literals and elementwise
+float ops inside a kernels/ module.
+"""
+import jax.numpy as jnp
+
+
+def contaminated_accumulate(acc):
+    y = acc.astype(jnp.float32) * 0.5
+    return jnp.floor(y)

@@ -1,0 +1,9 @@
+"""Lint fixture: ad-hoc PartitionSpec + undeclared logical axis name."""
+from jax.sharding import PartitionSpec
+
+from repro.dist.sharding import constrain
+
+
+def place(h):
+    h = constrain(h, "not_a_declared_axis", None)
+    return PartitionSpec("data"), h

@@ -1,0 +1,11 @@
+"""Lint fixture: a device array passed in a jit static_argnames slot."""
+import jax
+import jax.numpy as jnp
+
+
+def make(n):
+    def _fwd(x, s_max):
+        return x[:s_max]
+
+    fwd = jax.jit(_fwd, static_argnames=("s_max",))
+    return fwd(jnp.zeros((n,), jnp.int32), jnp.asarray(n))

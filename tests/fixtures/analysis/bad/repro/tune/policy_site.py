@@ -1,0 +1,4 @@
+"""Lint fixture: literal ExecutionPolicy with an invalid tile grid."""
+from repro.api.policy import ExecutionPolicy
+
+BAD_GRID = ExecutionPolicy(block_m=12)

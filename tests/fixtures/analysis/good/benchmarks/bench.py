@@ -1,0 +1,10 @@
+"""Lint fixture: properly synced timing — no findings expected."""
+import time
+
+import jax
+
+
+def time_compute(f, x):
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(x))
+    return time.perf_counter() - t0

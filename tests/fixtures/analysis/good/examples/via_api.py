@@ -1,0 +1,9 @@
+"""Lint fixture: kernel work through repro.api dispatch; artifact import
+(kernels.sgt) is exempt from api-dispatch-bypass by design."""
+from repro import api
+from repro.kernels import sgt as sgt_lib
+
+
+def run(ap, bp, block_m):
+    tiles = sgt_lib.sgt_artifacts(ap, block_m)
+    return api.bitserial_mm_packed(ap, bp, backend="pallas", tiles=tiles)

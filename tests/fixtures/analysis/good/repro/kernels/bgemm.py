@@ -1,0 +1,7 @@
+"""Lint fixture: integer-pure kernel code — no findings expected."""
+import jax
+import jax.numpy as jnp
+
+
+def popcount_accumulate(acc, aw, bw):
+    return acc + jax.lax.population_count(aw & bw).astype(jnp.int32)

@@ -1,0 +1,11 @@
+"""Lint fixture: jit statics fed host-safe values only."""
+import jax
+import jax.numpy as jnp
+
+
+def make(n):
+    def _fwd(x, s_max):
+        return x[:s_max]
+
+    fwd = jax.jit(_fwd, static_argnames=("s_max",))
+    return fwd(jnp.zeros((n,), jnp.int32), int(n))

@@ -1,0 +1,5 @@
+"""Lint fixture: literal ExecutionPolicy sites with valid tile grids."""
+from repro.api.policy import DEFAULT_POLICY, ExecutionPolicy
+
+WIDE = ExecutionPolicy(block_m=16, block_w=8)
+SGT = DEFAULT_POLICY.replace(jump="sgt")

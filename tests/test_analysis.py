@@ -1,0 +1,209 @@
+"""Tests for repro.analysis: lint engine, rules, baseline, trace checker.
+
+The fixture trees under tests/fixtures/analysis/{bad,good}/ mirror the
+repo layout; lint's ``rel_root`` re-bases path scoping so the same rules
+fire on them exactly as they would on real code in those locations.
+"""
+import json
+import pathlib
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import engine
+from repro.analysis.rules import ALL_RULES
+from repro.launch import lint as lint_cli
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+
+RULE_NAMES = {r.name for r in ALL_RULES}
+EXPECTED_RULES = {
+    "kernel-int-purity", "sharding-spec-layering", "sharding-axis-declared",
+    "bench-timer-sync", "api-dispatch-bypass", "serve-jit-static",
+    "policy-grid",
+}
+
+
+# ------------------------------------------------------------------ the repo
+
+def test_repo_is_clean():
+    """The real tree lints clean — every true violation was fixed or
+    carries a documented waiver."""
+    res = engine.run_lint()
+    assert res.files > 50  # the scan actually covered the repo
+    assert res.findings == [], "\n".join(str(f) for f in res.findings)
+
+
+def test_rule_registry_complete():
+    assert RULE_NAMES == EXPECTED_RULES
+
+
+# ------------------------------------------------------------ fixture trees
+
+def test_bad_fixtures_trip_every_rule():
+    res = engine.run_lint(paths=[BAD], rel_root=BAD)
+    tripped = {f.rule for f in res.findings}
+    assert tripped == EXPECTED_RULES, (
+        f"rules with no failing fixture: {EXPECTED_RULES - tripped}; "
+        f"unexpected: {tripped - EXPECTED_RULES}")
+
+
+def test_good_fixtures_are_clean():
+    res = engine.run_lint(paths=[GOOD], rel_root=GOOD)
+    assert res.findings == [], "\n".join(str(f) for f in res.findings)
+
+
+def test_findings_carry_location_and_message():
+    res = engine.run_lint(paths=[BAD], rel_root=BAD)
+    for f in res.findings:
+        assert f.path and f.line > 0 and f.message
+    grid = [f for f in res.findings if f.rule == "policy-grid"]
+    assert grid and "block_m" in grid[0].message  # ValueError surfaced
+
+
+def test_cli_strict_fails_on_each_fixture_violation():
+    for f in sorted(BAD.rglob("*.py")):
+        rc = lint_cli.main(["--strict", "--rel-root", str(BAD), str(f)])
+        assert rc == 1, f"{f} should fail lint"
+    assert lint_cli.main(["--strict", "--rel-root", str(GOOD),
+                          str(GOOD)]) == 0
+
+
+def test_cli_json_output(capsys):
+    rc = lint_cli.main(["--json", "--rel-root", str(BAD), str(BAD)])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["files"] == len(list(BAD.rglob("*.py")))
+    assert {f["rule"] for f in payload["findings"]} == EXPECTED_RULES
+
+
+# ---------------------------------------------------------------- baselines
+
+def _bad_findings():
+    return engine.run_lint(paths=[BAD], rel_root=BAD).findings
+
+
+def test_baseline_suppresses_exactly_its_pins(tmp_path):
+    findings = _bad_findings()
+    assert len(findings) >= len(EXPECTED_RULES)
+    spare, pinned = findings[0], findings[1:]
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(engine.baseline_payload(pinned)))
+    new, suppressed, stale = engine.split_by_baseline(
+        findings, engine.load_baseline(bl))
+    assert [f.key() for f in new] == [spare.key()]
+    assert {f.key() for f in suppressed} == {f.key() for f in pinned}
+    assert stale == []
+
+    # pin everything -> CLI exits 0 even with --strict
+    bl.write_text(json.dumps(engine.baseline_payload(findings)))
+    assert lint_cli.main(["--strict", "--rel-root", str(BAD),
+                          "--baseline", str(bl), str(BAD)]) == 0
+
+
+def test_stale_baseline_entries_fail_strict_only(tmp_path):
+    findings = _bad_findings()
+    payload = engine.baseline_payload(findings)
+    payload["findings"].append({"rule": "kernel-int-purity",
+                                "path": "repro/kernels/gone.py",
+                                "message": "was fixed long ago"})
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(payload))
+    args = ["--rel-root", str(BAD), "--baseline", str(bl), str(BAD)]
+    assert lint_cli.main(args) == 0          # stale is advisory by default
+    assert lint_cli.main(["--strict"] + args) == 1  # strict: baselines shrink
+
+
+def test_write_baseline_round_trips(tmp_path):
+    bl = tmp_path / "pins.json"
+    assert lint_cli.main(["--rel-root", str(BAD),
+                          "--write-baseline", str(bl), str(BAD)]) == 0
+    keys = engine.load_baseline(bl)
+    assert set(keys) == {f.key() for f in _bad_findings()}
+
+
+# ------------------------------------------------------------------- waivers
+
+def test_waiver_pragma_trailing_and_standalone(tmp_path):
+    tree = tmp_path / "repro" / "kernels"
+    tree.mkdir(parents=True)
+    f = tree / "ops.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "a = jnp.float32  # lint: allow[kernel-int-purity]\n"
+        "# lint: allow[kernel-int-purity]\n"
+        "b = jnp.float32\n"
+        "c = jnp.float32\n")
+    res = engine.run_lint(paths=[f], rel_root=tmp_path)
+    assert [fd.line for fd in res.findings] == [5]  # only the unwaived line
+
+
+def test_waiver_on_def_covers_whole_body(tmp_path):
+    tree = tmp_path / "repro" / "kernels"
+    tree.mkdir(parents=True)
+    f = tree / "ops.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "# epilogue is float by design\n"
+        "# lint: allow[kernel-int-purity]\n"
+        "def epilogue(x):\n"
+        "    return x.astype(jnp.float32) * 0.5\n"
+        "def kernel(x):\n"
+        "    return x.astype(jnp.float32)\n")
+    res = engine.run_lint(paths=[f], rel_root=tmp_path)
+    assert {fd.line for fd in res.findings} == {7}
+
+
+# ------------------------------------------------------------- trace checker
+
+def test_trace_checker_passes_on_registered_backends():
+    from repro import api
+    from repro.analysis import trace
+    for name in api.list_backends():
+        checks, fails = trace.check_backend(name, bits=(1, 3, 8))
+        assert checks > 0
+        assert fails == [], "\n".join(fails)
+
+
+def test_trace_flags_float_contaminated_kernel():
+    from repro.analysis import trace
+    from repro.api import backends
+
+    class FloatyBackend(backends.XlaDotBackend):
+        # identical numerics, but round-trips the accumulator through
+        # f32 — exactly the contamination the checker exists to catch
+        name = "floaty-fixture"
+
+        def bitserial_mm(self, a_packed, b_packed, *, policy):
+            acc = super().bitserial_mm(a_packed, b_packed, policy=policy)
+            return jnp.floor(acc.astype(jnp.float32)).astype(jnp.int32)
+
+    checks, fails = trace.check_backend(FloatyBackend(), bits=(2,))
+    assert fails, "contaminated backend traced as pure"
+    assert any("float" in f for f in fails)
+
+
+def test_trace_policy_sites_report_file_line():
+    from repro.analysis import trace
+    sites, dynamic, fails = trace.check_policy_sites([BAD], rel_root=BAD)
+    assert sites >= 1
+    assert any("repro/tune/policy_site.py:4" in f for f in fails)
+    assert all("invalid ExecutionPolicy" in f for f in fails)
+
+
+def test_trace_repo_policy_sites_all_valid():
+    from repro.analysis import trace
+    sites, dynamic, fails = trace.check_policy_sites()
+    assert sites > 0
+    assert fails == [], "\n".join(fails)
+
+
+# --------------------------------------------------------------- CLI extras
+
+def test_list_rules(capsys):
+    assert lint_cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for name in EXPECTED_RULES:
+        assert name in out

@@ -1,11 +1,18 @@
 """Rule-table completeness: every logical axis name the models use must
-resolve (to a mesh axis or an explicit None) in every make_rules mode."""
-import ast
+resolve (to a mesh axis or an explicit None) in every make_rules mode.
+
+The AST collectors that used to live here as private walkers moved into
+the shared lint engine (repro.analysis.rules.sharding_layers) — the
+``sharding-axis-declared`` lint rule checks DECLARATION (every name in
+LOGICAL_AXES) repo-wide, while this test keeps the part that needs
+make_rules at runtime: RESOLUTION under every mode combination.
+"""
 import itertools
 import os
 
 import pytest
 
+from repro.analysis.rules import sharding_layers
 from repro.dist import sharding as shd
 
 MODELS_DIR = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
@@ -13,46 +20,9 @@ MODELS_DIR = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
 MESH_AXES = {"pod", "data", "model"}
 
 
-def _constrain_axis_names() -> set:
-    """Every string literal passed to a constrain(...) call in models/."""
-    names = set()
-    for fname in sorted(os.listdir(MODELS_DIR)):
-        if not fname.endswith(".py"):
-            continue
-        with open(os.path.join(MODELS_DIR, fname)) as f:
-            tree = ast.parse(f.read(), filename=fname)
-        for node in ast.walk(tree):
-            if not isinstance(node, ast.Call):
-                continue
-            fn = node.func
-            callee = fn.id if isinstance(fn, ast.Name) else (
-                fn.attr if isinstance(fn, ast.Attribute) else None)
-            if callee != "constrain":
-                continue
-            for arg in node.args[1:]:
-                if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
-                    names.add(arg.value)
-    return names
-
-
-def _rules_get_names() -> set:
-    """Logical names the models look up directly via rules.get("...")."""
-    names = set()
-    for fname in sorted(os.listdir(MODELS_DIR)):
-        if not fname.endswith(".py"):
-            continue
-        with open(os.path.join(MODELS_DIR, fname)) as f:
-            tree = ast.parse(f.read(), filename=fname)
-        for node in ast.walk(tree):
-            if (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Attribute)
-                    and node.func.attr == "get"
-                    and isinstance(node.func.value, ast.Name)
-                    and node.func.value.id == "rules"
-                    and node.args
-                    and isinstance(node.args[0], ast.Constant)):
-                names.add(node.args[0].value)
-    return names
+def _used_names() -> set:
+    return (sharding_layers.constrain_axis_names(MODELS_DIR)
+            | sharding_layers.rules_get_names(MODELS_DIR))
 
 
 ALL_COMBOS = list(itertools.product(
@@ -61,9 +31,16 @@ ALL_COMBOS = list(itertools.product(
 
 def test_models_actually_use_constrain():
     # guard against the scanner silently matching nothing
-    names = _constrain_axis_names()
+    names = sharding_layers.constrain_axis_names(MODELS_DIR)
     assert len(names) >= 8, names
     assert "batch" in names and "qkv_compute" in names
+
+
+def test_shared_collectors_agree_with_lint_rule():
+    # the lint rule and this test must see the same axis universe: every
+    # collected name is declared, so the sharding-axis-declared rule
+    # passing implies the resolution tests below cover everything
+    assert _used_names() <= set(shd.LOGICAL_AXES)
 
 
 @pytest.mark.parametrize("mode,multi_pod,context_parallel,zero3", ALL_COMBOS)
@@ -71,7 +48,7 @@ def test_every_constrain_axis_resolves(mode, multi_pod, context_parallel,
                                        zero3):
     rules = shd.make_rules(mode, multi_pod=multi_pod,
                            context_parallel=context_parallel, zero3=zero3)
-    used = _constrain_axis_names() | _rules_get_names()
+    used = _used_names()
     missing = sorted(n for n in used if n not in rules)
     assert not missing, (
         f"make_rules({mode!r}, multi_pod={multi_pod}, "

@@ -170,11 +170,14 @@ def test_sweep_smoke_grid_rejects_and_measures():
         "backend": "pallas", "iters": 1, "warmup": 1,
         "candidates": [{}, {"jump": "compact"}, {"block_n": 100}],
     }
-    res = run_sweep(cfg, log=lambda *_: None)
+    res = run_sweep(cfg, log=lambda *_: None, source="unit.json")
     assert len(res.table) == 1
+    # the rejection names the offending candidate slot AND keeps the
+    # construction-time ValueError text
     assert [r["error"] for r in res.rejected] == [
-        "block_n must be a multiple of 128 (lane width of a packed B "
-        "tile), got 100"]
+        "unit.json:candidates[2]: block_n must be a multiple of 128 "
+        "(lane width of a packed B tile), got 100"]
+    assert [r["source"] for r in res.rejected] == ["unit.json:candidates[2]"]
     e = res.table.entries[0]
     assert e.op == "bitserial_mm" and e.baseline_ms is not None
     # trajectory records: BENCH spelling + phase tag, one per valid arm
