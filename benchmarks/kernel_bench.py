@@ -232,19 +232,25 @@ def bench_serve(smoke: bool = False) -> list[dict]:
       overload_arm — bounded queue sheds, p95 below the unbounded arm's
       shuffled_arm — reshuffled coalescing keeps ≥90% cache hit rate with
                      logits bit-identical to a scratch build
+      failover_arm — chaos-killed replica: zero lost requests, logits
+                     bit-identical to the no-fault run, hit rate recovers,
+                     shed submits carry finite retry-after hints
     """
-    from benchmarks.serve_throughput import (jump_arm, overload_arm,
-                                             sgt_arm, shuffled_arm)
+    from benchmarks.serve_throughput import (failover_arm, jump_arm,
+                                             overload_arm, sgt_arm,
+                                             shuffled_arm)
 
     if smoke:
         return (jump_arm(scale=0.004, parts_k=4, rounds=2)
                 + sgt_arm(scale=0.004, parts_k=4, rounds=2)
                 + overload_arm(scale=0.004, parts_k=4, bursts=3)
-                + shuffled_arm(scale=0.004, parts_k=4, rounds=2))
+                + shuffled_arm(scale=0.004, parts_k=4, rounds=2)
+                + failover_arm(scale=0.004, parts_k=16, rounds=3))
     return (jump_arm(scale=0.01, parts_k=8, rounds=4)
             + sgt_arm(scale=0.01, parts_k=8, rounds=4)
             + overload_arm(scale=0.006, parts_k=8, bursts=5)
-            + shuffled_arm(scale=0.006, parts_k=8, rounds=3))
+            + shuffled_arm(scale=0.006, parts_k=8, rounds=3)
+            + failover_arm(scale=0.008, parts_k=16, rounds=4))
 
 
 def main(smoke: bool = False) -> list[dict]:

@@ -400,9 +400,179 @@ def shuffled_arm(scale: float = 0.006, parts_k: int = 8, rounds: int = 3,
     return [rec]
 
 
+def failover_arm(scale: float = 0.008, parts_k: int = 16,
+                 rounds: int = 4) -> list[dict]:
+    """Chaos-tested replica failover: kill one replica mid-serve.
+
+    Three arms on identical repeat traffic over a 3-replica (virtual)
+    fleet, with the node budget pinned to one tile so every coalesced
+    plan is exactly one request — plan membership (which sets the §4.6
+    batch quantization scale) is then identical across arms, making
+    per-request logits comparable bit-for-bit:
+
+      clean    — no faults; the per-request reference logits.
+      failover — ``kill@2`` via the chaos harness: one replica dies
+                 mid-serve. Every submitted request must still complete
+                 (ZERO lost), logits bit-identical to the clean arm, the
+                 in-flight plan retried on a survivor, the dead replica's
+                 fingerprints re-homed, and the per-key hit rate in the
+                 final round recovered above 90% (the re-homed keys miss
+                 once while the survivor's cache re-warms, then hit).
+      shed     — a depth-bounded queue under burst arrival: rejected
+                 submits must carry a FINITE, positive ``retry_after_s``
+                 backoff hint (the queue-wait/latency p95 window).
+    """
+    import math
+
+    from repro.serve import FaultInjector
+
+    name = "ogbn-arxiv"
+    cfg, qparams, reqs, buckets = _setup(name, scale, parts_k)
+    tile = GNNServer(qparams, cfg, buckets=buckets).align
+    bad = [r.n_nodes for r in reqs if r.n_nodes > tile]
+    assert not bad, (
+        f"failover arm needs single-request plans (one per {tile}-node "
+        f"tile) for bit-identical comparison; partition finer: {bad}")
+
+    def run(tag, chaos=None):
+        srv = GNNServer(qparams, cfg, buckets=buckets, node_budget=tile,
+                        replicas=3, chaos=chaos)
+        outs, round_hits = [], []
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            h0, m0 = srv.cache.hits, srv.cache.misses
+            ids = [srv.submit(_fresh(r)) for r in reqs]
+            got = srv.drain(return_logits=True)
+            assert set(ids) <= set(got), f"{tag}: lost requests"
+            outs.append([np.asarray(got[i][1]) for i in ids])
+            dh = srv.cache.hits - h0
+            dm = srv.cache.misses - m0
+            round_hits.append(dh / max(dh + dm, 1))
+        return srv, outs, round_hits, time.perf_counter() - t0
+
+    clean_srv, clean_out, _, t_clean = run("clean")
+    chaos = FaultInjector("kill@2")
+    fo_srv, fo_out, fo_hits, t_fo = run("failover", chaos=chaos)
+
+    lost = sum(len(a) - len(b) for a, b in zip(clean_out, fo_out))
+    mismatch = sum(
+        not np.array_equal(a, b)
+        for ca, fa in zip(clean_out, fo_out) for a, b in zip(ca, fa))
+    st = fo_srv.stats
+    assert chaos.fired and chaos.fired[0]["kind"] == "kill"
+    assert lost == 0, f"failover lost {lost} requests"
+    assert mismatch == 0, (
+        f"{mismatch} requests' logits diverged from the no-fault run "
+        f"after failover")
+    assert st.requests_retried > 0 and st.replica_faults == 1
+    assert st.replicas_live == 2
+    hit_floor = 0.9
+    assert fo_hits[-1] >= hit_floor, (
+        f"post-failover hit rate {fo_hits[-1]:.2%} never recovered above "
+        f"{hit_floor:.0%}: re-homed fingerprints are not re-warming")
+
+    # shed arm: burst arrival into a depth-bounded queue -> finite hints
+    shed_srv = GNNServer(qparams, cfg, buckets=buckets, node_budget=tile,
+                         replicas=3,
+                         admission=AdmissionPolicy(max_depth=4,
+                                                   on_full="reject"))
+    for _ in range(2):
+        for r in reqs:
+            shed_srv.submit(_fresh(r))
+    shed_srv.drain()
+    sst = shed_srv.stats
+    assert sst.requests_shed > 0, "depth-4 queue under burst did not shed"
+    assert math.isfinite(sst.retry_after_s) and sst.retry_after_s > 0, (
+        f"shed submits must carry a finite retry-after hint, got "
+        f"{sst.retry_after_s}")
+
+    records = []
+    for tag, srv, dt, extra in (
+            ("clean", clean_srv, t_clean, {}),
+            ("failover", fo_srv, t_fo,
+             {"lost": lost, "logits_match": mismatch == 0,
+              "retried": st.requests_retried,
+              "replicas_live": st.replicas_live,
+              "rehomed_entries": st.cache_rehomed_entries,
+              "hit_rate_final": round(fo_hits[-1], 4)}),
+            ("shed", shed_srv, None,
+             {"shed": sst.requests_shed,
+              "retry_after_s": round(sst.retry_after_s, 6)})):
+        s = srv.stats
+        nps = (s.nodes / dt) if dt else s.nodes_per_s
+        rec = {"op": "serve_failover", "bits": srv.feat_bits,
+               "sparsity": round(s.zero_tile_skip_ratio, 4), "jump": "none",
+               "median_ms": round(s.p50_s * 1e3, 3),
+               "nodes_per_s": round(nps, 1), "arm": tag, **extra}
+        records.append(rec)
+        emit(f"serve_{name}_failover_{tag}", rec["nodes_per_s"],
+             "nodes_per_s", **extra)
+    return records
+
+
+ARMS = {
+    "main": main,
+    "jump_arm": jump_arm,
+    "sgt_arm": sgt_arm,
+    "overload_arm": overload_arm,
+    "shuffled_arm": shuffled_arm,
+    "failover_arm": failover_arm,
+}
+
+# smoke-scale overrides per arm (CI: small graphs, few rounds)
+_SMOKE_KW = {
+    "main": dict(scale=0.004, parts_k=4, rounds=2),
+    "jump_arm": dict(scale=0.004, parts_k=4, rounds=2),
+    "sgt_arm": dict(scale=0.004, parts_k=4, rounds=2),
+    "overload_arm": dict(scale=0.004, parts_k=4, bursts=3),
+    "shuffled_arm": dict(scale=0.004, parts_k=4, rounds=2),
+    "failover_arm": dict(scale=0.004, parts_k=16, rounds=3),
+}
+
+
+def _merge_bench(path: str, records: list[dict]) -> None:
+    """Merge records into a schema-2 BENCH_kernels.json, replacing
+    same-op records and restamping the provenance meta."""
+    import json
+    import os
+
+    from repro.tune.table import provenance
+
+    doc = {"schema": 2, "smoke": False, "records": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    ops = {r["op"] for r in records}
+    doc["records"] = [r for r in doc["records"]
+                      if r.get("op") not in ops] + records
+    doc["meta"] = provenance()
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"[bench] merged {len(records)} records -> {path} "
+          f"({len(doc['records'])} total)")
+
+
 if __name__ == "__main__":
-    main()
-    jump_arm()
-    sgt_arm()
-    overload_arm()
-    shuffled_arm()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arms", nargs="*", default=[],
+                    help=f"arms to run (default: all): {sorted(ARMS)}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: small graphs, few rounds")
+    ap.add_argument("--bench-out", metavar="PATH", default=None,
+                    help="merge the arms' records into this "
+                         "BENCH_kernels.json (replacing same-op records)")
+    cli = ap.parse_args()
+    picked = cli.arms or list(ARMS)
+    unknown = [a for a in picked if a not in ARMS]
+    if unknown:
+        ap.error(f"unknown arms {unknown}; choose from {sorted(ARMS)}")
+    out: list[dict] = []
+    for a in picked:
+        kw = _SMOKE_KW[a] if cli.smoke else {}
+        got = ARMS[a](**kw)
+        out.extend(got or [])
+    if cli.bench_out:
+        _merge_bench(cli.bench_out, out)

@@ -7,6 +7,7 @@ rationale and how to add a new one.
 """
 from __future__ import annotations
 
+from repro.analysis.rules.chaos import ChaosHarnessOnly
 from repro.analysis.rules.dispatch import DispatchBypass
 from repro.analysis.rules.jit_static import JitStaticArgs
 from repro.analysis.rules.kernel_purity import KernelIntPurity
@@ -24,6 +25,7 @@ ALL_RULES = (
     TimerSync(),
     DispatchBypass(),
     JitStaticArgs(),
+    ChaosHarnessOnly(),
     PolicyGridValidity(),
 )
 

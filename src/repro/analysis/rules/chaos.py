@@ -1,0 +1,61 @@
+"""serve-chaos-harness: failure injection only through serve/chaos.py.
+
+The failover gates (tests/test_serve_failover.py, the failover benchmark
+arm, the CI chaos-smoke job) rely on faults being DETERMINISTIC and
+REPLAYABLE: every fault fires from a seeded :class:`FaultSpec` at a batch
+ordinal, and the injector's ``fired`` audit log is asserted against.  An
+ad-hoc fault point in engine code — a ``time.sleep`` to fake a stall, a
+``raise ReplicaFault`` outside the harness — is invisible to that replay:
+the no-fault reference run and the chaos run would no longer differ by
+exactly the injected specs, and the bit-identical-logits gate stops
+meaning anything.  Sleeping in the engine also breaks the liveness
+contract (block-mode ``submit`` spins on ``_step_once``; backoff is
+accounted in ``ServeStats``, never slept).
+
+So: under ``repro/serve/``, only ``chaos.py`` may call ``time.sleep`` (or
+any ``sleep``) or construct/raise ``ReplicaFault``.  Engine code CATCHES
+ReplicaFault (that is the failover path); it must not originate one.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.engine import Rule
+
+_SCOPE = re.compile(r"(^|/)repro/serve/[^/]*\.py$")
+_HARNESS = re.compile(r"(^|/)repro/serve/chaos\.py$")
+
+
+class ChaosHarnessOnly(Rule):
+    name = "serve-chaos-harness"
+    description = ("in repro/serve/, only chaos.py may sleep or construct "
+                   "ReplicaFault — ad-hoc fault points break deterministic "
+                   "failover replay and engine liveness")
+
+    def applies_to(self, path: str) -> bool:
+        return bool(_SCOPE.search(path)) and not _HARNESS.search(path)
+
+    def check(self, path, tree, lines):
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            callee = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            if callee == "sleep":
+                out.append(self.finding(
+                    path, node,
+                    "time.sleep outside the chaos harness — a stall here "
+                    "is invisible to deterministic failover replay and "
+                    "breaks block-mode submit liveness (account the delay "
+                    "in ServeStats, or inject it via serve/chaos.py)"))
+            elif callee == "ReplicaFault":
+                out.append(self.finding(
+                    path, node,
+                    "ReplicaFault constructed outside the chaos harness — "
+                    "engine code catches replica faults, it must not "
+                    "originate them (add a FaultSpec via serve/chaos.py "
+                    "so the firing is seeded and auditable)"))
+        return out

@@ -4,8 +4,10 @@ JAX dispatch is asynchronous: ``t = time.perf_counter() - t0`` after an
 un-synced kernel launch times the ENQUEUE, not the compute, and the
 benchmark reports numbers that are off by orders of magnitude (the exact
 failure mode PRs 3-7 kept catching by hand in benchmarks/).  Every timing
-scope in ``benchmarks/`` and ``repro/perf/`` must therefore contain a
-recognized sync point between start and stop:
+scope in ``benchmarks/``, ``repro/perf/`` and ``repro/serve/`` (the
+serving engine's latency stats feed straggler eviction and retry-after
+hints — an enqueue-time sample there mis-evicts replicas) must therefore
+contain a recognized sync point between start and stop:
 
   * ``block_until_ready`` (jax.block_until_ready or the array method), or
   * a serving-engine call that syncs internally — ``drain()`` / ``step()``
@@ -25,7 +27,7 @@ import re
 
 from repro.analysis.engine import Rule
 
-_SCOPE = re.compile(r"(^|/)(benchmarks|repro/perf)/[^/]*\.py$")
+_SCOPE = re.compile(r"(^|/)(benchmarks|repro/perf|repro/serve)/[^/]*\.py$")
 
 _SYNC_NAMES = {"block_until_ready", "drain", "step", "infer_batch"}
 

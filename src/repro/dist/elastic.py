@@ -20,6 +20,12 @@ def replan_mesh(n_devices: int, model_par: int) -> tuple[int, int]:
     Model parallelism is pinned (it matches the checkpointed layout's TP
     degree); the data axis absorbs device loss, shrinking to the largest
     power of two that fits so batch math stays divisible.
+
+    Degenerate cases are well-defined: one device with ``model_par=1``
+    plans ``(1, 1)``; a non-dividing count floors first and then rounds
+    down to a power of two (``replan_mesh(6, 4) == (1, 4)`` — two devices
+    idle, ``replan_mesh(7, 1) == (4, 1)``); fewer devices than the pinned
+    TP degree is unrecoverable and raises.
     """
     if model_par < 1:
         raise ValueError(f"model_par must be >= 1, got {model_par}")
@@ -35,12 +41,31 @@ class StragglerWatchdog:
     """Rolling per-step wall-time tracker that flags outlier steps.
 
     observe(step, wall) -> True iff `wall` exceeds ``tolerance * p50`` of
-    the history seen so far; flagged steps are kept in ``.flagged``.
+    the history seen so far; flagged steps are kept in ``.flagged``
+    (bounded to the same rolling ``window`` as the wall-time history, so
+    a long-lived watchdog on a chronically slow host does not grow
+    without bound).
+
+    Edge cases are pinned down because the serving tier evicts replicas
+    on this signal: before the window has ANY samples nothing can be an
+    outlier (there is no p50 yet), so the first observation is never
+    flagged; the tolerance boundary is EXCLUSIVE (``wall == tolerance *
+    p50`` is not a straggler — only strictly slower is); ``tolerance``
+    below 1 would flag typical steps and is rejected up front, as are
+    non-finite or negative wall times (a poisoned sample would skew every
+    later p50).
     """
 
     def __init__(self, tolerance: float = 2.0, window: int = 512):
-        self.tolerance = float(tolerance)
-        self.window = int(window)
+        tolerance, window = float(tolerance), int(window)
+        if not np.isfinite(tolerance) or tolerance < 1.0:
+            raise ValueError(
+                f"tolerance is a multiple of the rolling p50 and must be "
+                f"finite and >= 1, got {tolerance}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.tolerance = tolerance
+        self.window = window
         self.times: list[float] = []
         self.flagged: list[dict] = []
 
@@ -53,11 +78,17 @@ class StragglerWatchdog:
         return float(np.percentile(self.times, 95)) if self.times else 0.0
 
     def observe(self, step: int, wall: float) -> bool:
+        wall = float(wall)
+        if not np.isfinite(wall) or wall < 0.0:
+            raise ValueError(
+                f"wall must be a finite non-negative duration, got {wall}")
         is_straggler = bool(self.times) and wall > self.tolerance * self.p50
         if is_straggler:
             self.flagged.append(
-                {"step": int(step), "wall_s": float(wall), "p50": self.p50})
-        self.times.append(float(wall))
+                {"step": int(step), "wall_s": wall, "p50": self.p50})
+            if len(self.flagged) > self.window:
+                del self.flagged[: len(self.flagged) - self.window]
+        self.times.append(wall)
         if len(self.times) > self.window:
             del self.times[: len(self.times) - self.window]
         return is_straggler

@@ -106,7 +106,7 @@ def serve_gnn(args) -> dict:
     """Stream repeat subgraph traffic through the continuous GNN engine."""
     from repro.graph import datasets, partition
     from repro.models import gnn
-    from repro.serve import (AdmissionPolicy, GNNServer,
+    from repro.serve import (AdmissionPolicy, FaultInjector, GNNServer,
                              requests_from_partitions)
     from repro.serve.queue import buckets_for
 
@@ -130,26 +130,45 @@ def serve_gnn(args) -> dict:
     # artifact by default), "off" = hand-picked defaults, PATH = a table
     # emitted by `python -m repro.launch.sweep`
     table = (None if args.tuning_table == "off" else args.tuning_table)
+    # deterministic chaos: --inject-failure specs go through the ONE
+    # sanctioned fault source (serve/chaos.py), mirroring
+    # launch.train --simulate-failure-at
+    chaos = (FaultInjector(*args.inject_failure, seed=args.seed)
+             if args.inject_failure else None)
     mesh = make_local_mesh()
     # data-parallel replicas resolve through the dist "serve" rule table;
-    # the engine routes coalesced batches to replicas by fingerprint
-    # affinity (repeats hit the replica holding their cached tiles)
+    # the engine routes INDIVIDUAL subgraphs to replicas by rendezvous
+    # fingerprint affinity (repeats hit the replica holding their cached
+    # tiles); --replicas decouples the logical fleet from the device count
     with mesh, shd.shard_ctx(mesh, shd.make_rules("serve")):
         server = GNNServer(qparams, cfg, feat_bits=args.feat_bits,
                            buckets=buckets, mesh=mesh, admission=admission,
-                           cache_bytes=args.cache_bytes, tuning_table=table)
+                           cache_bytes=args.cache_bytes, tuning_table=table,
+                           replicas=args.replicas, chaos=chaos,
+                           straggler_tolerance=args.straggler_tolerance)
         for rnd in range(args.rounds):
             for r in reqs:
                 server.submit(type(r)(edges=r.edges, features=r.features,
                                       n_nodes=r.n_nodes))
             server.drain()
+            st = server.stats
             print(f"[serve-gnn] round {rnd}: compiles={server.n_compiles} "
                   f"cache_hit_rate={server.cache.hit_rate:.2f} "
-                  f"shed={server.stats.requests_shed}", flush=True)
+                  f"shed={st.requests_shed} live={st.replicas_live} "
+                  f"retried={st.requests_retried} "
+                  f"retry_after={st.retry_after_s:.4f}s", flush=True)
     summary = server.stats.summary()
     summary["n_compiles"] = server.n_compiles
-    summary["replicas"] = len(list(mesh.devices.flat))
     summary["tuned_policies"] = server.tuned_policies()
+    summary["replicas"] = server.stats.replicas_live
+    if chaos is not None:
+        summary["chaos_fired"] = chaos.fired
+        print(f"[serve-gnn] chaos fired: {json.dumps(chaos.fired)}",
+              flush=True)
+    plan = server.mesh_plan()
+    if plan is not None:
+        print(f"[serve-gnn] mesh plan for {server.stats.replicas_live} "
+              f"live: {plan}", flush=True)
     print(f"[serve-gnn] {json.dumps(summary)}", flush=True)
     return summary
 
@@ -191,6 +210,21 @@ def main(argv=None) -> dict:
                     default="reject",
                     help="at the queue bound: shed with a reason (reject) "
                          "or backpressure the producer (block)")
+    # GNN elastic-replica knobs
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="logical replica count for per-subgraph routing "
+                         "(default: one per device; more = virtual "
+                         "replicas sharing devices round-robin)")
+    ap.add_argument("--inject-failure", action="append", default=[],
+                    metavar="KIND@BATCH[:k=v,...]",
+                    help="deterministic fault injection (repeatable): "
+                         "kill@2, stall@1:replica=0,stall_s=0.2, "
+                         "slow@3:repeat=4 — mirrors launch.train "
+                         "--simulate-failure-at")
+    ap.add_argument("--straggler-tolerance", type=float, default=None,
+                    help="evict a replica whose batch wall time exceeds "
+                         "TOL x its rolling p50 for consecutive batches "
+                         "(default: detection off)")
     ap.add_argument("--tuning-table", default="auto", metavar="PATH",
                     help="GNN execution-policy source: 'auto' (active "
                          "repro.tune table, the default), 'off' "

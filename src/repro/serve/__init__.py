@@ -1,21 +1,30 @@
 """Serving substrate: continuous-batching GNN engine + LM decode engines.
 
   engine.GNNServer   — queue + micro-batcher + tile cache + quantized
-                       fast path + admission control (see docs/serve.md)
+                       fast path + admission control + elastic replica
+                       failover (see docs/serve.md)
   queue              — SubgraphRequest, shape buckets, MicroBatcher,
                        AdmissionPolicy (bounded queue / backpressure)
   cache              — cross-request non-zero tile reuse (§4.4 extended),
                        per-subgraph entries + compose_entries
+  router             — per-subgraph rendezvous routing + cache-aware
+                       cold placement over the elastic replica set
+  chaos              — deterministic fault injection (the ONE sanctioned
+                       fault source; see the serve-chaos-harness lint)
 
 The LM decode engine lives in repro.launch.serve (it needs mesh context).
 """
 from repro.serve.cache import TileCache, TileEntry, compose_entries
-from repro.serve.engine import GNNServer, ServeStats
+from repro.serve.chaos import (FaultInjector, FaultSpec, ReplicaFault,
+                               parse_fault)
+from repro.serve.engine import GNNServer, ServeStats, STATS_WINDOW
 from repro.serve.queue import (AdmissionError, AdmissionPolicy, Bucket,
                                MicroBatcher, SubgraphRequest, make_buckets,
                                requests_from_partitions)
+from repro.serve.router import ReplicaRouter
 
-__all__ = ["GNNServer", "ServeStats", "TileCache", "TileEntry",
-           "compose_entries", "Bucket", "MicroBatcher", "SubgraphRequest",
-           "AdmissionPolicy", "AdmissionError", "make_buckets",
-           "requests_from_partitions"]
+__all__ = ["GNNServer", "ServeStats", "STATS_WINDOW", "TileCache",
+           "TileEntry", "compose_entries", "Bucket", "MicroBatcher",
+           "SubgraphRequest", "AdmissionPolicy", "AdmissionError",
+           "make_buckets", "requests_from_partitions", "ReplicaRouter",
+           "FaultInjector", "FaultSpec", "ReplicaFault", "parse_fault"]

@@ -173,6 +173,14 @@ class TileCache:
     just built; repeats rebuild rather than pinning an over-budget
     resident). ``resident_bytes`` is maintained incrementally and
     reported through ``ServeStats``.
+
+    Replica awareness: the engine keys entries with the owning replica id
+    as the LAST tuple element (``("sub", fp, replica)``), so the cache
+    also maintains per-replica resident bytes (``bytes_by_replica`` — the
+    cache-pressure signal for cold-fingerprint placement in
+    serve/router.py) and can drop a failed replica's entries in one call
+    (``drop_replica`` — the re-home accounting: those fingerprints
+    re-warm on their new owner's first miss).
     """
 
     def __init__(self, capacity: int = 64, cache_bytes: int | None = None):
@@ -184,6 +192,7 @@ class TileCache:
         self.cache_bytes = cache_bytes
         self.resident_bytes = 0
         self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._replica_bytes: collections.Counter = collections.Counter()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -203,18 +212,59 @@ class TileCache:
         self.hits += 1
         return entry
 
+    @staticmethod
+    def _key_replica(key) -> int | None:
+        """The owning replica id when the key carries one (last element)."""
+        if (isinstance(key, tuple) and len(key) >= 2
+                and isinstance(key[-1], int)):
+            return key[-1]
+        return None
+
+    def _forget(self, key, entry: TileEntry) -> int:
+        nb = entry.nbytes()
+        self.resident_bytes -= nb
+        rep = self._key_replica(key)
+        if rep is not None:
+            self._replica_bytes[rep] -= nb
+            if self._replica_bytes[rep] <= 0:
+                del self._replica_bytes[rep]
+        return nb
+
     def put(self, key, entry: TileEntry) -> None:
         old = self._entries.pop(key, None)
         if old is not None:
-            self.resident_bytes -= old.nbytes()
+            self._forget(key, old)
         self._entries[key] = entry
-        self.resident_bytes += entry.nbytes()
+        nb = entry.nbytes()
+        self.resident_bytes += nb
+        rep = self._key_replica(key)
+        if rep is not None:
+            self._replica_bytes[rep] += nb
         while len(self._entries) > self.capacity or (
                 self.cache_bytes is not None
                 and self.resident_bytes > self.cache_bytes):
-            _, evicted = self._entries.popitem(last=False)
-            self.resident_bytes -= evicted.nbytes()
+            k, evicted = self._entries.popitem(last=False)
+            self._forget(k, evicted)
             self.evictions += 1
+
+    def bytes_by_replica(self) -> dict:
+        """replica id -> resident bytes (the cold-placement pressure)."""
+        return dict(self._replica_bytes)
+
+    def drop_replica(self, replica: int) -> tuple[int, int]:
+        """Drop every entry owned by ``replica``; (entries, bytes) dropped.
+
+        The failed replica's device-resident artifacts are unreachable;
+        their fingerprints re-home (serve/router.py) and the new owner
+        rebuilds on its first miss — the engine accounts the drop as
+        ``cache_rehomed_entries``/``cache_rehomed_bytes``.
+        """
+        doomed = [k for k in self._entries
+                  if self._key_replica(k) == replica]
+        n_bytes = 0
+        for k in doomed:
+            n_bytes += self._forget(k, self._entries.pop(k))
+        return len(doomed), n_bytes
 
     def note_batch(self, n_cached: int, n_members: int) -> None:
         """Record one coalesced batch's composition outcome."""
@@ -229,6 +279,7 @@ class TileCache:
 
     def clear(self) -> None:
         self._entries.clear()
+        self._replica_bytes.clear()
         self.resident_bytes = 0
 
     @property

@@ -25,13 +25,22 @@ subsystem:
   quantized fast path — the §4.6 compound transfer delivers packed integer
       features that feed ``forward_qgtc`` pre-quantized, no
       dequantize -> requantize roundtrip.
-  multi-replica — with ``mesh=``, batches spread across the mesh's
-      devices by fingerprint affinity: a given subgraph group always
-      lands on the same replica, so repeats still hit that replica's
-      tile cache while distinct traffic balances over the fleet
-      (data-parallel serving; the launcher installs the ``repro.dist``
-      "serve" rule table around the engine so any sharded model code
-      resolves against it).
+  multi-replica + failover — INDIVIDUAL subgraphs (not coalesced
+      groups) route to replicas by rendezvous-hash fingerprint affinity,
+      with cache-aware placement for cold fingerprints (serve/router.py);
+      the batcher coalesces per route, so repeats hit their replica's
+      tile cache while distinct traffic balances over the fleet. The
+      replica set is ELASTIC: a replica that dies mid-batch
+      (serve/chaos.py ``ReplicaFault``) is removed, its queued/in-flight
+      requests retry on survivors (bounded by ``max_retries``, never
+      silently lost), its fingerprints re-home and the tile cache
+      re-warms on the new owner; a replica that persistently straggles
+      (per-replica ``dist.elastic.StragglerWatchdog``) is evicted the
+      same way. Shedding submits carry a ``retry_after_s`` backoff hint
+      from the queue-wait p95 window. With ``mesh=`` replicas map onto
+      the mesh devices; ``replicas=`` decouples the logical replica
+      count from the device count (virtual replicas — the routing and
+      failover paths are fully exercisable on one CPU device).
 
 The execution engine and its tuning remain a constructor choice
 (``backend=``/``policy=`` routed through the repro.api registry). The LM
@@ -53,6 +62,7 @@ from repro import api
 from repro.core import bitops
 from repro.core.quantize import QuantParams
 from repro.core.zerotile import compact_tiles, occupancy_stats, tile_occupancy
+from repro.dist.elastic import StragglerWatchdog, replan_mesh
 from repro.kernels import sgt
 from repro.graph.batching import SubgraphBatch
 from repro.graph.packing import (compound_nbytes, transfer_packed,
@@ -60,12 +70,19 @@ from repro.graph.packing import (compound_nbytes, transfer_packed,
 from repro.models import gnn
 from repro.perf import report
 from repro.serve.cache import TileCache, TileEntry, compose_entries
+from repro.serve.chaos import ReplicaFault
 from repro.serve.queue import (AdmissionPolicy, CoalescedBatch, MicroBatcher,
                                SubgraphRequest, _ceil_to,
                                subgraph_fingerprint)
+from repro.serve.router import ReplicaRouter
 from repro.tune import table as tune_table
 
-__all__ = ["GNNServer", "ServeStats"]
+__all__ = ["GNNServer", "ServeStats", "STATS_WINDOW"]
+
+# one rolling window for every per-request/per-batch sample series in
+# ServeStats (latencies AND queue waits): a long-running server reports
+# recent percentiles without growing memory per request
+STATS_WINDOW = 4096
 
 
 @dataclasses.dataclass
@@ -95,16 +112,35 @@ class ServeStats:
     requests_shed: int = 0
     submit_blocked: int = 0
     shed_reasons: dict = dataclasses.field(default_factory=dict)
+    # elastic replica set: live-count snapshot plus fault/retry
+    # accounting. A faulted batch's requests are retried on survivors —
+    # requests_retried counts them; they are never dropped.
+    replicas_live: int = 1
+    replica_faults: int = 0
+    replicas_evicted: int = 0
+    requests_retried: int = 0
+    # accumulated exponential-backoff hint for retried work (accounted,
+    # not slept — the single-process engine must not stall survivors)
+    retry_backoff_s: float = 0.0
+    # the current client backoff hint (rolling queue-wait p95, see
+    # GNNServer._retry_hint); re-stamped on every shed so rejected
+    # submits always carry a finite retry_after_s
+    retry_after_s: float = 0.0
+    # tile-cache entries/bytes dropped when a replica left the set (the
+    # fingerprints re-homed; the new owner re-warms on its first miss)
+    cache_rehomed_entries: int = 0
+    cache_rehomed_bytes: int = 0
     # per-batch compute latency (timer stopped AFTER device sync),
     # per-request queue->result latency, and per-request queue-wait
-    # (submit -> coalesce); bounded windows so a long-running server
-    # reports recent percentiles without growing per request
+    # (submit -> coalesce); all three share the same bounded rolling
+    # window (STATS_WINDOW) so a long-running server reports recent
+    # percentiles without growing per request
     batch_latencies_s: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=4096))
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW))
     request_latencies_s: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=4096))
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW))
     queue_wait_s: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=4096))
+        default_factory=lambda: collections.deque(maxlen=STATS_WINDOW))
 
     @property
     def zero_tile_skip_ratio(self) -> float:
@@ -141,6 +177,14 @@ class ServeStats:
             "requests_shed": self.requests_shed,
             "submit_blocked": self.submit_blocked,
             "shed_reasons": dict(self.shed_reasons),
+            "replicas_live": self.replicas_live,
+            "replica_faults": self.replica_faults,
+            "replicas_evicted": self.replicas_evicted,
+            "requests_retried": self.requests_retried,
+            "retry_backoff_s": round(self.retry_backoff_s, 6),
+            "retry_after_s": round(self.retry_after_s, 6),
+            "cache_rehomed_entries": self.cache_rehomed_entries,
+            "cache_rehomed_bytes": self.cache_rehomed_bytes,
         }
         out.update(report.latency_summary(self.batch_latencies_s, "batch_"))
         out.update(report.latency_summary(self.request_latencies_s, "req_"))
@@ -171,6 +215,19 @@ class GNNServer:
     ``admission=`` bounds the queue (see serve/queue.py AdmissionPolicy);
     None = unbounded (every submit admitted).
 
+    ``replicas=`` sets the logical replica count (default: one per mesh
+    device, or 1 with no mesh); replicas beyond the device count share
+    devices round-robin (virtual replicas — per-subgraph routing and
+    failover behave identically, so they are testable on one CPU).
+    ``chaos=`` installs a serve/chaos.py ``FaultInjector`` at the batch
+    execution point; ``max_retries`` bounds per-request fault retries (a
+    request faulting more raises loudly — work is never shed silently).
+    ``straggler_tolerance=`` enables per-replica straggler eviction via
+    ``dist.elastic.StragglerWatchdog``: a replica whose batch wall time
+    exceeds tolerance x its own rolling p50 for ``straggler_strikes``
+    consecutive batches is removed from the routing set (its traffic
+    re-homes; None = detection off).
+
     ``tuning_table`` feeds the policy fallback chain when ``policy=None``:
     each shape bucket resolves its own tuned ``serve_forward`` policy at
     jit time (one nearest-bucket lookup per ``n_pad``, memoized — the jit
@@ -189,7 +246,10 @@ class GNNServer:
                  edge_budget: int | None = None, tile: int = 128,
                  cache_entries: int = 64, cache_bytes: int | None = None,
                  mesh=None, admission: AdmissionPolicy | None = None,
-                 tuning_table="auto"):
+                 tuning_table="auto", replicas: int | None = None,
+                 chaos=None, max_retries: int = 3,
+                 straggler_tolerance: float | None = None,
+                 straggler_strikes: int = 2):
         self.qparams = qparams
         self.cfg = cfg
         self.feat_bits = feat_bits
@@ -259,6 +319,29 @@ class GNNServer:
         #                                     per-group cache it replaces
         self._devices = (list(mesh.devices.flat) if mesh is not None
                          else [None])
+        self._mesh = mesh
+        if replicas is not None and replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if max_retries < 1:
+            raise ValueError(f"max_retries must be >= 1, got {max_retries}")
+        n_rep = replicas if replicas is not None else len(self._devices)
+        # logical replica -> backing device; virtual replicas share devices
+        # round-robin, so routing/failover are exercisable on one device
+        self._replica_dev = {r: self._devices[r % len(self._devices)]
+                             for r in range(n_rep)}
+        self._router = ReplicaRouter(range(n_rep))
+        self._routed_load: collections.Counter = collections.Counter()
+        self._chaos = chaos
+        self.max_retries = max_retries
+        self._straggler_tolerance = straggler_tolerance
+        self._straggler_strikes = int(straggler_strikes)
+        self._watchdogs: dict = {}   # replica -> StragglerWatchdog
+        self._strikes: collections.Counter = collections.Counter()
+        self.stats.replicas_live = n_rep
+        # shed rejections carry a data-driven retry-after hint (queue-wait /
+        # batch-latency p95); wired post-construction so the hint closes
+        # over live stats
+        self.batcher.retry_hint = self._retry_hint
         self._dev_params: dict = {}
         # One jitted forward for the whole server: unpack the compound
         # features and run the pre-quantized integer path. jax.jit caches
@@ -307,6 +390,14 @@ class GNNServer:
         cache_size = getattr(self._fwd, "_cache_size", None)
         return int(cache_size()) if cache_size is not None else -1
 
+    @property
+    def align(self) -> int:
+        """Node alignment of the composition grid (the policy's tile
+        footprint). A ``node_budget`` equal to this forces single-request
+        plans — the failover benchmark uses that to make per-request
+        logits coalescing-invariant."""
+        return self._align
+
     # ------------------------------------------------- continuous batching
 
     def submit(self, req: SubgraphRequest) -> int | None:
@@ -325,6 +416,7 @@ class GNNServer:
         reason = self.batcher.admit_reason(req)
         if reason is not None:
             if pol.on_full == "reject":
+                self.stats.retry_after_s = self._retry_hint()
                 self.stats.requests_shed += 1
                 self.stats.shed_reasons[reason] = \
                     self.stats.shed_reasons.get(reason, 0) + 1
@@ -338,7 +430,11 @@ class GNNServer:
                         f"queue, still refused): {reason}")
                 self._spill.update(self._step_once())
                 reason = self.batcher.admit_reason(req)
+        # per-subgraph routing: pin the request to a replica by fingerprint
+        # affinity (known keys stick; cold keys get cache-aware placement)
+        req.replica = self._route_fp(req.fingerprint)
         self.batcher.add(req)
+        self._routed_load[req.replica] += 1
         self.stats.requests_admitted += 1
         return req.req_id
 
@@ -357,17 +453,38 @@ class GNNServer:
         return out
 
     def _step_once(self) -> dict:
-        """Run one batch; {req_id: (predictions, logits)} (empty if idle)."""
+        """Run one batch; {req_id: (predictions, logits)} (empty if idle).
+
+        The plan runs on its route's replica. A ``ReplicaFault`` (from the
+        chaos harness, or a real integration's device/RPC error
+        translation) marks the replica failed and requeues the in-flight
+        requests at the FRONT of the queue re-routed to survivors — a
+        retried batch returns {} this call and completes on a later step;
+        it is never silently dropped.
+        """
         plan = self.batcher.next_plan()
         if plan is None:
             return {}
+        rep = plan.replica if plan.replica is not None else 0
+        self._routed_load[rep] -= len(plan.requests)
+        if self._routed_load[rep] <= 0:
+            self._routed_load.pop(rep, None)
         t0 = time.perf_counter()
+        try:
+            if self._chaos is not None:
+                self._chaos.at_execute(rep, self.stats.batches)
+            logits, entry = self._execute_plan(plan, rep)
+            logits.block_until_ready()  # latency = compute, not dispatch
+        except ReplicaFault as fault:
+            self._retry_after_fault(plan, fault)
+            return {}
+        t1 = time.perf_counter()
+        self._observe_replica(rep, t1 - t0)
+        # queue-wait accounts on SUCCESS only: a faulted batch's requests
+        # stay queued and would double-count their wait on the retry
         for r in plan.requests:
             if r.t_enqueue is not None:
                 self.stats.queue_wait_s.append(t0 - r.t_enqueue)
-        logits, entry = self._execute_plan(plan)
-        logits.block_until_ready()  # latency = compute, not dispatch
-        t1 = time.perf_counter()
         self._account(plan.batch, entry, t1 - t0)
         out = {}
         lg = np.asarray(logits)
@@ -390,6 +507,140 @@ class GNNServer:
         while self.batcher or self._spill:
             out.update(self.step(return_logits=return_logits))
         return out
+
+    # ------------------------------------------- routing + elastic failover
+
+    def _route_fp(self, fp: str) -> int:
+        """Replica for a fingerprint: sticky if routed before, else
+        cache-aware cold placement (least loaded x least cache pressure,
+        HRW-ranked tiebreak — see serve/router.py)."""
+        if self._router.known(fp):
+            return self._router.route(fp)
+        return self._router.place(fp, load=self._routed_load,
+                                  pressure=self._cache_pressure())
+
+    def _cache_pressure(self) -> dict:
+        """{replica: fractional cache occupancy} for cold placement."""
+        if self.cache is None:
+            return {}
+        by_rep = self.cache.bytes_by_replica()
+        denom = (float(self.cache.cache_bytes)
+                 if self.cache.cache_bytes is not None
+                 else float(self.cache.resident_bytes) + 1.0)
+        return {r: b / denom for r, b in by_rep.items()}
+
+    def _retry_hint(self) -> float:
+        """Data-driven retry-after: p95 of recent queue waits and batch
+        latencies (floored to 1 ms so the hint is always finite > 0)."""
+        return max(report.percentile(list(self.stats.queue_wait_s), 95),
+                   report.percentile(list(self.stats.batch_latencies_s), 95),
+                   1e-3)
+
+    def _retry_after_fault(self, plan: CoalescedBatch,
+                           fault: ReplicaFault) -> None:
+        """Requeue a faulted plan's requests on survivors (bounded)."""
+        self.stats.replica_faults += 1
+        over = [r.req_id for r in plan.requests
+                if r.retries + 1 > self.max_retries]
+        if over:
+            raise RuntimeError(
+                f"requests {over} exceeded max_retries={self.max_retries} "
+                f"after replica faults; refusing to shed admitted work "
+                f"silently") from fault
+        self.mark_failed(fault.replica)
+        backoff = 0.0
+        for r in plan.requests:
+            r.retries += 1
+            backoff = max(backoff, min(0.001 * 2 ** (r.retries - 1), 1.0))
+            r.replica = self._route_fp(r.fingerprint)
+            self._routed_load[r.replica] += 1
+        self.stats.requests_retried += len(plan.requests)
+        # backoff is ACCOUNTED, not slept: the engine must keep making
+        # progress (block-mode submits spin on _step_once), so the delay
+        # surfaces as a hint for callers instead of stalling the loop
+        self.stats.retry_backoff_s += backoff
+        self.stats.retry_after_s = max(self._retry_hint(), backoff)
+        self.batcher.requeue(plan.requests, front=True)
+
+    def mark_failed(self, replica: int) -> None:
+        """Remove a replica from the routing set and re-home its state.
+
+        Idempotent for already-removed replicas. Pinned fingerprints
+        re-home deterministically (HRW over survivors), the replica's
+        cache entries are dropped (re-warmed on the next miss) and queued
+        requests re-route. Failing the LAST replica raises — there are no
+        survivors to retry on.
+        """
+        if replica not in self._router.replicas:
+            return
+        if len(self._router) == 1:
+            raise RuntimeError(
+                f"replica {replica} failed with no survivors; cannot "
+                f"re-home in-flight work")
+        self._router.remove_replica(replica)
+        self.stats.replicas_live = len(self._router)
+        if self.cache is not None:
+            n, nbytes = self.cache.drop_replica(replica)
+            self.stats.cache_rehomed_entries += n
+            self.stats.cache_rehomed_bytes += nbytes
+            self.stats.cache_resident_bytes = self.cache.resident_bytes
+        for k in [k for k in self._composed
+                  if isinstance(k, tuple) and k[-1] == replica]:
+            del self._composed[k]
+        self._watchdogs.pop(replica, None)
+        self._strikes.pop(replica, None)
+        self._replica_dev.pop(replica, None)
+        self._reroute_queued()
+
+    def add_replica(self, replica: int | None = None) -> int:
+        """Join a (new or recovered) replica; queued traffic re-routes so
+        fingerprints whose HRW owner is the newcomer move to it (minimal
+        disruption: only those move). Returns the replica id."""
+        if replica is None:
+            replica = max(self._router.replicas) + 1
+        self._router.add_replica(replica)
+        self._replica_dev[replica] = \
+            self._devices[replica % len(self._devices)]
+        self.stats.replicas_live = len(self._router)
+        self._reroute_queued()
+        return replica
+
+    def _reroute_queued(self) -> None:
+        """Re-route every queued request after a membership change."""
+        self._routed_load.clear()
+        for r in self.batcher.pending():
+            r.replica = self._route_fp(r.fingerprint)
+            self._routed_load[r.replica] += 1
+
+    def _observe_replica(self, replica: int, wall: float) -> None:
+        """Feed the per-replica straggler watchdog; evict on a strike run.
+
+        Detection is off unless ``straggler_tolerance`` was passed. A
+        replica is evicted only after ``straggler_strikes`` CONSECUTIVE
+        flagged batches (one slow batch — a compile, a cold cache — is
+        normal), and never when it is the last one standing.
+        """
+        if self._straggler_tolerance is None:
+            return
+        wd = self._watchdogs.get(replica)
+        if wd is None:
+            wd = self._watchdogs[replica] = StragglerWatchdog(
+                tolerance=self._straggler_tolerance)
+        if wd.observe(self.stats.batches, wall):
+            self._strikes[replica] += 1
+        else:
+            self._strikes.pop(replica, None)
+        if (self._strikes[replica] >= self._straggler_strikes
+                and len(self._router) > 1):
+            self.stats.replicas_evicted += 1
+            self.mark_failed(replica)
+
+    def mesh_plan(self) -> tuple[int, int] | None:
+        """(data, model) mesh shape for the live replica count (None
+        without a mesh) — what a multi-host restore would replan to."""
+        if self._mesh is None:
+            return None
+        return replan_mesh(len(self._router), 1)
 
     # ------------------------------------------------------ one-batch path
 
@@ -502,14 +753,15 @@ class GNNServer:
         return (entry.compact_idx, entry.compact_counts,
                 min(s_pad, max(kt, 1)), "compact")
 
-    def _execute(self, batch: SubgraphBatch, key: str):
+    def _execute(self, batch: SubgraphBatch, key: str, rep: int | None = None):
         """Transfer + forward one batch; returns (logits, tile entry)."""
         # fingerprint-affinity placement: repeats of the same subgraph
         # group always land on the same replica (its cache has the tiles);
-        # distinct traffic spreads uniformly over the fleet
-        dev_idx = int(key[:8], 16) % len(self._devices)
-        device = self._devices[dev_idx]
-        cache_key = (key, dev_idx)
+        # distinct traffic spreads over the fleet by HRW rank
+        if rep is None:
+            rep = self._router.route(key)
+        device = self._replica_dev.get(rep)
+        cache_key = (key, rep)
         self._check_feat_dim(batch)
         nb = compound_nbytes(batch, nbits=self.feat_bits)
         entry = self.cache.get(cache_key) if self.cache is not None else None
@@ -532,7 +784,7 @@ class GNNServer:
             self.stats.cache_hits += 1
         return self._forward(device, entry, packed, meta), entry
 
-    def _execute_plan(self, plan: CoalescedBatch):
+    def _execute_plan(self, plan: CoalescedBatch, rep: int = 0):
         """Transfer + forward one coalesced plan via per-subgraph entries.
 
         Each member subgraph's tile artifacts are cached under its OWN
@@ -547,18 +799,17 @@ class GNNServer:
         if self.cache is None:
             # no cache: the whole-batch scratch build (also the reference
             # path the composition is asserted bit-identical against)
-            return self._execute(batch, plan.fingerprint)
+            return self._execute(batch, plan.fingerprint, rep)
         self._check_feat_dim(batch)
-        dev_idx = int(plan.fingerprint[:8], 16) % len(self._devices)
-        device = self._devices[dev_idx]
+        device = self._replica_dev.get(rep)
         nb = compound_nbytes(batch, nbits=self.feat_bits)
-        keys = [("sub", r.fingerprint, dev_idx) for r in plan.requests]
+        keys = [("sub", r.fingerprint, rep) for r in plan.requests]
         entries = [self.cache.get(k) for k in keys]
         n_cached = sum(e is not None for e in entries)
         self.cache.note_batch(n_cached, len(entries))
         offsets = [off for _, off, _ in plan.spans]
         l2_key = (tuple(r.fingerprint for r in plan.requests),
-                  batch.n_nodes, dev_idx)
+                  batch.n_nodes, rep)
         if n_cached == len(entries):
             packed, meta = transfer_packed_feats(batch, nbits=self.feat_bits,
                                                  device=device)

@@ -70,6 +70,10 @@ class SubgraphRequest:
     t_enqueue: float | None = None  # stamped by the engine at submit()
     client_id: str | None = None    # admission fair-share bucket (None =
     #                                 anonymous, exempt from fair-share)
+    replica: int | None = None      # routed replica (serve/router.py);
+    #                                 None = unrouted (raw batcher use)
+    retries: int = 0                # replica-fault retry count; bounded by
+    #                                 the engine's max_retries (never silent)
 
     @property
     def n_edges(self) -> int:
@@ -190,11 +194,24 @@ class AdmissionPolicy:
 
 
 class AdmissionError(ValueError):
-    """Raised by MicroBatcher.add when the admission policy rejects."""
+    """Raised by MicroBatcher.add when the admission policy rejects.
 
-    def __init__(self, reason: str):
-        super().__init__(reason)
+    ``retry_after_s`` is the engine's client backoff hint (derived from
+    the rolling queue-wait p95 — see ``GNNServer._retry_hint``): how long
+    the caller should wait before resubmitting instead of hammering a
+    shedding server. None when the batcher has no hint source (raw
+    batcher use outside an engine). ``reason`` stays the STABLE policy
+    string (it keys the bounded ``shed_reasons`` histogram); the hint is
+    appended to the exception MESSAGE only.
+    """
+
+    def __init__(self, reason: str, retry_after_s: float | None = None):
+        msg = reason
+        if retry_after_s is not None:
+            msg = f"{reason} (retry after {retry_after_s:.3f}s)"
+        super().__init__(msg)
         self.reason = reason
+        self.retry_after_s = retry_after_s
 
 
 @dataclasses.dataclass
@@ -205,6 +222,15 @@ class CoalescedBatch:
     requests: list  # the member SubgraphRequests, in block order
     spans: list     # [(req_id, node_offset, n_nodes)] for result splitting
     bucket: Bucket | None
+
+    @property
+    def replica(self) -> int | None:
+        """The replica every member routed to (None: unrouted traffic).
+
+        ``next_plan`` only coalesces requests sharing one route, so the
+        head member's replica is the whole plan's execution target.
+        """
+        return self.requests[0].replica if self.requests else None
 
     @property
     def fingerprint(self) -> str:
@@ -243,7 +269,8 @@ class MicroBatcher:
                  node_budget: int | None = None,
                  edge_budget: int | None = None, tile: int = 128,
                  align: int | None = None,
-                 admission: AdmissionPolicy | None = None):
+                 admission: AdmissionPolicy | None = None,
+                 retry_hint=None):
         if buckets is not None and not buckets:
             raise ValueError("buckets must be a non-empty tuple or None")
         if align is not None and align <= 0:
@@ -261,6 +288,9 @@ class MicroBatcher:
         self.tile = tile
         self.align = align
         self.admission = admission
+        # zero-arg callable returning the current backoff hint in seconds
+        # (the engine wires its queue-wait-p95 probe in); None = no hint
+        self.retry_hint = retry_hint
         self._queue: collections.deque = collections.deque()
         self._queued_nodes = 0
         self._queued_edges = 0
@@ -316,41 +346,83 @@ class MicroBatcher:
                 f"{self.edge_budget} edges); pre-partition it smaller")
         reason = self.admit_reason(req)
         if reason is not None:
-            raise AdmissionError(reason)
+            hint = self.retry_hint() if self.retry_hint is not None else None
+            raise AdmissionError(reason, retry_after_s=hint)
         self._queue.append(req)
         self._queued_nodes += req.n_nodes
         self._queued_edges += req.n_edges
         if req.client_id is not None:
             self._per_client[req.client_id] += 1
 
-    def _popleft(self) -> SubgraphRequest:
-        r = self._queue.popleft()
+    def _uncount(self, r: SubgraphRequest) -> None:
         self._queued_nodes -= r.n_nodes
         self._queued_edges -= r.n_edges
         if r.client_id is not None:
             self._per_client[r.client_id] -= 1
             if self._per_client[r.client_id] <= 0:
                 del self._per_client[r.client_id]
-        return r
+
+    def requeue(self, reqs, *, front: bool = True) -> None:
+        """Re-admit already-admitted requests after a replica fault.
+
+        Deliberately NO admission check: these requests were admitted
+        once, and shedding a retry would be silent loss — exactly what
+        the failover contract forbids (the queue may transiently exceed
+        its caps by the in-flight plan's size; it drains first). The
+        accounting (queued nodes/edges, per-client counts) is restored.
+        ``front=True`` keeps the retried work at the head of the FIFO —
+        it is the oldest traffic.
+        """
+        for r in (reversed(list(reqs)) if front else reqs):
+            if front:
+                self._queue.appendleft(r)
+            else:
+                self._queue.append(r)
+            self._queued_nodes += r.n_nodes
+            self._queued_edges += r.n_edges
+            if r.client_id is not None:
+                self._per_client[r.client_id] += 1
+
+    def pending(self) -> tuple:
+        """Snapshot of the queued requests in FIFO order (the engine
+        re-routes these in place when the replica set changes)."""
+        return tuple(self._queue)
 
     def next_plan(self) -> CoalescedBatch | None:
-        """Coalesce the longest FIFO prefix that fits the budget.
+        """Coalesce the longest FIFO run that fits the budget — one route.
 
-        The budget is checked against the ALIGNED node footprint (what the
-        batch actually occupies), so an aligned batch always fits its
-        bucket.
+        Requests carry the replica the engine routed them to
+        (``req.replica``; None for unrouted traffic, which all matches).
+        A plan only coalesces requests sharing the HEAD request's route,
+        so one batch executes on one replica while other replicas'
+        traffic keeps its FIFO order in the queue. Budget semantics are
+        unchanged from the single-route batcher: the first same-route
+        request that does not fit ends the run (no skip-ahead within a
+        route — FIFO fairness), and the budget is checked against the
+        ALIGNED node footprint (what the batch actually occupies), so an
+        aligned batch always fits its bucket.
         """
         if not self._queue:
             return None
-        taken, n_aln, e_tot = [], 0, 0
-        while self._queue:
-            r = self._queue[0]
+        route = self._queue[0].replica
+        taken, keep = [], []
+        n_aln = e_tot = 0
+        full = False
+        for r in self._queue:
+            if r.replica != route or full:
+                keep.append(r)
+                continue
             if taken and (n_aln + self._footprint(r.n_nodes) > self.node_budget
                           or e_tot + r.n_edges > self.edge_budget):
-                break
-            taken.append(self._popleft())
+                full = True
+                keep.append(r)
+                continue
+            taken.append(r)
             n_aln += self._footprint(r.n_nodes)
             e_tot += r.n_edges
+        self._queue = collections.deque(keep)
+        for r in taken:
+            self._uncount(r)
         return self._coalesce(taken, n_aln, e_tot)
 
     def _coalesce(self, reqs, n_aln: int, e_tot: int) -> CoalescedBatch:

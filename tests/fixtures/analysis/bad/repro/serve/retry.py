@@ -1,0 +1,14 @@
+"""Lint fixture: ad-hoc fault points in engine code (not the harness)."""
+import time
+
+
+class ReplicaFault(RuntimeError):
+    pass
+
+
+def step_once(plan, replica):
+    if replica == 0:
+        # hand-rolled chaos: invisible to deterministic failover replay
+        raise ReplicaFault(f"replica {replica} down")
+    time.sleep(0.001)  # hand-rolled backoff: stalls block-mode submits
+    return plan

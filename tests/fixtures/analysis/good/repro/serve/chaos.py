@@ -1,0 +1,14 @@
+"""Lint fixture: the chaos harness itself may sleep and raise faults."""
+import time
+
+
+class ReplicaFault(RuntimeError):
+    pass
+
+
+def at_execute(replica, batch, specs):
+    for s in specs:
+        if s["kind"] == "kill" and batch >= s["at_batch"]:
+            raise ReplicaFault(f"replica {replica} kill at {batch}")
+        if s["kind"] == "stall":
+            time.sleep(s["stall_s"])

@@ -22,7 +22,7 @@ RULE_NAMES = {r.name for r in ALL_RULES}
 EXPECTED_RULES = {
     "kernel-int-purity", "sharding-spec-layering", "sharding-axis-declared",
     "bench-timer-sync", "api-dispatch-bypass", "serve-jit-static",
-    "policy-grid",
+    "serve-chaos-harness", "policy-grid",
 }
 
 

@@ -1,0 +1,93 @@
+"""Direct unit tests for repro.dist.elastic edge cases.
+
+The serving tier evicts replicas on the watchdog signal and replans the
+mesh from the live replica count (serve/engine.py), so the degenerate
+behaviors documented in dist/elastic.py are pinned down here — the
+happy-path coverage lives in tests/test_checkpoint.py.
+"""
+import pytest
+
+from repro.dist.elastic import StragglerWatchdog, replan_mesh
+
+
+# -------------------------------------------------------------- replan_mesh
+
+def test_replan_single_device():
+    assert replan_mesh(1, 1) == (1, 1)
+
+
+def test_replan_power_of_two_data_axis():
+    assert replan_mesh(8, 2) == (4, 2)
+    assert replan_mesh(16, 4) == (4, 4)
+
+
+def test_replan_non_dividing_floors_then_rounds_down():
+    # 6 // 4 = 1 -> (1, 4): two devices idle rather than an invalid mesh
+    assert replan_mesh(6, 4) == (1, 4)
+    # 7 // 1 = 7 -> largest power of two below is 4
+    assert replan_mesh(7, 1) == (4, 1)
+
+
+def test_replan_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="model_par"):
+        replan_mesh(4, 0)
+    with pytest.raises(ValueError, match="cannot fit"):
+        replan_mesh(1, 2)
+
+
+# -------------------------------------------------------- StragglerWatchdog
+
+def test_first_observation_never_flagged():
+    w = StragglerWatchdog(tolerance=1.0)
+    # even an enormous wall time: there is no p50 yet to be an outlier of
+    assert not w.observe(0, 1e6)
+    assert w.flagged == []
+    assert w.p50 == pytest.approx(1e6)
+
+
+def test_tolerance_boundary_is_exclusive():
+    w = StragglerWatchdog(tolerance=2.0, window=64)
+    for i in range(8):
+        w.observe(i, 0.1)
+    assert not w.observe(8, 0.2)     # == tolerance * p50: not a straggler
+    assert w.observe(9, 0.2000001)   # strictly above: flagged
+
+
+def test_window_bounds_times_and_flagged():
+    w = StragglerWatchdog(tolerance=1.5, window=4)
+    w.observe(0, 1.0)
+    for i in range(1, 50):
+        w.observe(i, 100.0 + i)  # every one an outlier vs the rolling p50
+    assert len(w.times) == 4
+    assert len(w.flagged) <= 4  # a chronic straggler must not grow memory
+    # the rolling p50 follows the recent window, not the 1.0 seed sample
+    assert w.p50 > 100.0
+
+
+def test_validation_rejects_bad_construction():
+    with pytest.raises(ValueError, match="tolerance"):
+        StragglerWatchdog(tolerance=0.5)
+    with pytest.raises(ValueError, match="tolerance"):
+        StragglerWatchdog(tolerance=float("nan"))
+    with pytest.raises(ValueError, match="tolerance"):
+        StragglerWatchdog(tolerance=float("inf"))
+    with pytest.raises(ValueError, match="window"):
+        StragglerWatchdog(window=0)
+
+
+def test_validation_rejects_poisoned_samples():
+    w = StragglerWatchdog()
+    with pytest.raises(ValueError, match="wall"):
+        w.observe(0, float("nan"))
+    with pytest.raises(ValueError, match="wall"):
+        w.observe(0, -0.1)
+    assert w.times == []  # the rejected samples never entered the window
+
+
+def test_zero_wall_times_are_legal():
+    # a sub-resolution step is a valid (fast) sample, not a straggler
+    w = StragglerWatchdog(tolerance=2.0)
+    assert not w.observe(0, 0.0)
+    assert not w.observe(1, 0.0)
+    assert w.p50 == 0.0
+    assert w.observe(2, 0.001)  # anything beats 2 * p50 == 0 exclusively

@@ -1,0 +1,395 @@
+"""Elastic serving tier: routing, chaos-injected failover, retry hints.
+
+Unit layers (router / chaos / cache accounting / stats windows) need no
+device work; the engine integration tests stream real ogbn-arxiv subgraph
+traffic with the node budget pinned to one tile, so every coalesced plan
+is a single request and per-request logits are coalescing-invariant
+(the §4.6 batch quantization scale depends on plan membership) — that is
+what makes "bit-identical to the no-fault run" a meaningful gate.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import datasets, partition
+from repro.models import gnn
+from repro.serve import (AdmissionError, AdmissionPolicy, FaultInjector,
+                         FaultSpec, GNNServer, ReplicaFault, ReplicaRouter,
+                         STATS_WINDOW, ServeStats, SubgraphRequest,
+                         TileCache, TileEntry, parse_fault,
+                         requests_from_partitions)
+from repro.serve.queue import buckets_for
+
+# ------------------------------------------------------------------- router
+
+
+def _owners(router, fps):
+    return {fp: router.owner(fp) for fp in fps}
+
+
+FPS = [f"fp{i:03d}" for i in range(120)]
+
+
+def test_router_routes_are_deterministic():
+    a = ReplicaRouter(range(5), seed=7)
+    b = ReplicaRouter(range(5), seed=7)
+    assert [a.route(fp) for fp in FPS] == [b.route(fp) for fp in FPS]
+    # a different seed shards a different keyspace
+    c = ReplicaRouter(range(5), seed=8)
+    assert [a.owner(fp) for fp in FPS] != [c.owner(fp) for fp in FPS]
+
+
+def test_router_minimal_disruption_on_remove():
+    r = ReplicaRouter(range(5))
+    before = _owners(r, FPS)
+    r.remove_replica(2)
+    after = _owners(r, FPS)
+    moved = {fp for fp in FPS if before[fp] != after[fp]}
+    # ONLY the dead replica's keys move (each to its runner-up score)
+    assert moved == {fp for fp in FPS if before[fp] == 2}
+    assert all(after[fp] != 2 for fp in FPS)
+
+
+def test_router_add_claims_only_new_top_keys():
+    r = ReplicaRouter(range(4))
+    before = _owners(r, FPS)
+    r.add_replica(4)
+    after = _owners(r, FPS)
+    moved = {fp for fp in FPS if before[fp] != after[fp]}
+    assert moved == {fp for fp in FPS if after[fp] == 4}
+    assert 0 < len(moved) < len(FPS)  # claims some, not everything
+
+
+def test_router_cold_placement_prefers_idle_low_pressure():
+    r = ReplicaRouter(range(3))
+    # replica 0 drowning in queued work, replica 1 cache-full: 2 wins
+    rep = r.place("cold-fp", load={0: 100, 1: 0, 2: 0},
+                  pressure={1: 10.0, 2: 0.0})
+    assert rep == 2
+    # the placement pinned: later routes stick even as signals change
+    assert r.known("cold-fp")
+    assert r.route("cold-fp") == 2
+    assert r.place("cold-fp", load={2: 999}) == 2
+
+
+def test_router_place_degenerates_to_hrw():
+    r = ReplicaRouter(range(4))
+    for fp in FPS[:20]:
+        assert r.place(fp) == r.owner(fp)
+
+
+def test_router_pin_capacity_lru():
+    r = ReplicaRouter(range(3), pin_capacity=4)
+    for fp in FPS[:10]:
+        r.place(fp, load={r.owner(fp): 5})  # force non-owner pins
+    assert sum(r.known(fp) for fp in FPS[:10]) == 4
+    # an evicted pin degrades to the HRW owner — deterministic, no error
+    assert r.route(FPS[0]) == r.owner(FPS[0])
+
+
+def test_router_rehome_is_deterministic():
+    a = ReplicaRouter(range(4))
+    b = ReplicaRouter(range(4))
+    for rt in (a, b):
+        for fp in FPS[:30]:
+            rt.place(fp, load={0: 1})
+        rt.remove_replica(rt.route(FPS[0]))
+    assert [a.route(fp) for fp in FPS[:30]] == \
+        [b.route(fp) for fp in FPS[:30]]
+
+
+def test_router_validation_errors():
+    with pytest.raises(ValueError, match="at least one replica"):
+        ReplicaRouter([])
+    with pytest.raises(ValueError, match="pin_capacity"):
+        ReplicaRouter([0], pin_capacity=0)
+    r = ReplicaRouter([0, 1])
+    with pytest.raises(ValueError, match="already live"):
+        r.add_replica(1)
+    with pytest.raises(KeyError):
+        r.remove_replica(9)
+    r.remove_replica(1)
+    with pytest.raises(RuntimeError, match="last live"):
+        r.remove_replica(0)
+
+
+# -------------------------------------------------------------------- chaos
+
+def test_parse_fault_specs():
+    assert parse_fault("kill@3") == FaultSpec(kind="kill", at_batch=3)
+    s = parse_fault("stall@2:replica=1,stall_s=0.2")
+    assert (s.kind, s.at_batch, s.replica, s.stall_s) == ("stall", 2, 1, 0.2)
+    assert parse_fault("slow@4:repeat=3").repeat == 3
+
+
+def test_parse_fault_rejects_malformed():
+    for bad in ("kill", "kill@", "@3", "kill@3:bogus=1", "kill@3:replica"):
+        with pytest.raises(ValueError):
+            parse_fault(bad)
+
+
+def test_faultspec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="explode", at_batch=0)
+    with pytest.raises(ValueError, match="at_batch"):
+        FaultSpec(kind="kill", at_batch=-1)
+    with pytest.raises(ValueError, match="repeat"):
+        FaultSpec(kind="kill", at_batch=0, repeat=0)
+    with pytest.raises(TypeError):
+        FaultInjector(42)
+
+
+def test_injector_kill_one_shot_and_audit():
+    inj = FaultInjector("kill@2")
+    inj.at_execute(0, 0)
+    inj.at_execute(1, 1)
+    with pytest.raises(ReplicaFault) as e:
+        inj.at_execute(1, 2)
+    assert (e.value.replica, e.value.kind, e.value.batch) == (1, "kill", 2)
+    # budget spent: the retried batch at the SAME ordinal proceeds
+    inj.at_execute(0, 2)
+    assert inj.fired == [{"kind": "kill", "replica": 1, "batch": 2,
+                          "spec": 0}]
+
+
+def test_injector_replica_filter_and_repeat():
+    inj = FaultInjector(FaultSpec(kind="kill", at_batch=0, replica=3,
+                                  repeat=2))
+    inj.at_execute(0, 5)  # wrong replica: no fire
+    for _ in range(2):
+        with pytest.raises(ReplicaFault):
+            inj.at_execute(3, 5)
+    inj.at_execute(3, 6)  # budget burned out
+    assert [f["replica"] for f in inj.fired] == [3, 3]
+
+
+# ----------------------------------------------------- cache replica bytes
+
+def _entry(n=4):
+    z = jnp.zeros
+    return TileEntry(adj=z((n, n), jnp.int32),
+                     inv_deg=z((n, 1), jnp.float32),
+                     a_packed=z((n, 1), jnp.uint32),
+                     occupancy=z((1, 1), jnp.int32),
+                     compact_idx=z((1, 1), jnp.int32),
+                     compact_counts=z((1,), jnp.int32),
+                     occ_stats={"tiles_total": 1, "tiles_nonzero": 0})
+
+
+def test_cache_tracks_bytes_by_replica_and_drop():
+    c = TileCache(capacity=16)
+    for i in range(2):
+        c.put(("sub", f"fp0{i}", 0), _entry())
+    c.put(("sub", "fp10", 1), _entry())
+    # replacing an existing key must not double-count its replica bytes
+    c.put(("sub", "fp10", 1), _entry())
+    per = c.bytes_by_replica()
+    assert set(per) == {0, 1} and per[0] == 2 * per[1] > 0
+    n, nbytes = c.drop_replica(0)
+    assert n == 2 and nbytes == per[0]
+    assert c.bytes_by_replica() == {1: per[1]}
+    assert c.resident_bytes == per[1]
+    assert c.get(("sub", "fp00", 0)) is None
+    assert c.get(("sub", "fp10", 1)) is not None
+    # replica-less keys (infer_batch-style strings) are simply untracked
+    c.put("plainkey", _entry())
+    assert 1 not in c.bytes_by_replica() or c.bytes_by_replica()[1] > 0
+    assert c.drop_replica(7) == (0, 0)
+
+
+# ------------------------------------------------------------ stats windows
+
+def test_stats_windows_share_one_bound():
+    st = ServeStats()
+    for dq in (st.batch_latencies_s, st.request_latencies_s,
+               st.queue_wait_s):
+        assert dq.maxlen == STATS_WINDOW
+        for i in range(STATS_WINDOW + 500):
+            dq.append(float(i))
+        assert len(dq) == STATS_WINDOW
+        assert dq[0] == 500.0  # oldest samples rolled out
+    assert math.isfinite(st.p95_s)
+
+
+# -------------------------------------------------------- engine integration
+
+@pytest.fixture(scope="module")
+def setup():
+    data = datasets.load("ogbn-arxiv", scale=0.008, seed=0)
+    parts = partition.partition(data.csr, 16)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = gnn.quantize_params(params, cfg)
+    reqs = requests_from_partitions(data, parts)
+    buckets = buckets_for(reqs, levels=2)
+    align = GNNServer(qparams, cfg, buckets=buckets).align
+    assert all(r.n_nodes <= align for r in reqs), \
+        "fixture needs one-tile subgraphs for single-request plans"
+    return cfg, qparams, reqs, buckets, align
+
+
+def _fresh(r, **kw):
+    return SubgraphRequest(edges=r.edges, features=r.features,
+                           n_nodes=r.n_nodes, **kw)
+
+
+def _server(setup, **kw):
+    cfg, qparams, reqs, buckets, align = setup
+    kw.setdefault("node_budget", align)
+    return GNNServer(qparams, cfg, buckets=buckets, **kw)
+
+
+def _rounds(srv, reqs, n, collect=False):
+    outs = []
+    for _ in range(n):
+        ids = [srv.submit(_fresh(r)) for r in reqs]
+        got = srv.drain(return_logits=True)
+        missing = [i for i in ids if i not in got]
+        assert not missing, f"lost requests {missing}"
+        outs.append([np.asarray(got[i][1]) for i in ids])
+    return outs if collect else None
+
+
+def test_routing_spreads_and_sticks(setup):
+    cfg, qparams, reqs, buckets, align = setup
+    srv = _server(setup, replicas=3)
+    sub1 = [_fresh(r) for r in reqs]
+    for q in sub1:
+        srv.submit(q)
+    srv.drain()
+    route1 = {q.fingerprint: q.replica for q in sub1}
+    assert len(set(route1.values())) > 1, "all traffic on one replica"
+    sub2 = [_fresh(r) for r in reqs]
+    for q in sub2:
+        srv.submit(q)
+    srv.drain()
+    assert {q.fingerprint: q.replica for q in sub2} == route1, \
+        "repeat fingerprints did not stick to their replica"
+
+
+def test_failover_zero_loss_bit_identical(setup):
+    cfg, qparams, reqs, buckets, align = setup
+    clean = _rounds(_server(setup, replicas=3), reqs, 3, collect=True)
+    # arm the kill in round 2 (single-request plans: one batch per
+    # request), so the victim already holds warm cache entries to re-home
+    chaos = FaultInjector(f"kill@{len(reqs) + 2}")
+    srv = _server(setup, replicas=3, chaos=chaos)
+    fault = _rounds(srv, reqs, 3, collect=True)
+    for rd, (a, b) in enumerate(zip(clean, fault)):
+        assert len(a) == len(b)
+        for i, (la, lb) in enumerate(zip(a, b)):
+            np.testing.assert_array_equal(
+                la, lb, err_msg=f"round {rd} request {i} diverged from "
+                                f"the no-fault run")
+    st = srv.stats
+    assert chaos.fired and chaos.fired[0]["kind"] == "kill"
+    assert st.replica_faults == 1
+    assert st.requests_retried >= 1
+    assert st.replicas_live == 2
+    assert st.cache_rehomed_entries > 0 and st.cache_rehomed_bytes > 0
+    assert st.retry_backoff_s > 0
+    s = st.summary()
+    assert s["replicas_live"] == 2 and s["requests_retried"] >= 1
+
+
+def test_failover_last_replica_raises(setup):
+    srv = _server(setup, replicas=1, chaos=FaultInjector("kill@0"))
+    srv.submit(_fresh(setup[2][0]))
+    with pytest.raises(RuntimeError, match="no survivors"):
+        srv.drain()
+
+
+def test_max_retries_bounds_refires(setup):
+    # a fault storm that keeps killing whatever executes: the engine must
+    # give up LOUDLY once a request's retry budget is spent, not shed it
+    chaos = FaultInjector(FaultSpec(kind="kill", at_batch=0, repeat=10))
+    srv = _server(setup, replicas=5, chaos=chaos, max_retries=2)
+    srv.submit(_fresh(setup[2][0]))
+    with pytest.raises(RuntimeError, match="max_retries=2"):
+        srv.drain()
+    assert srv.stats.requests_retried == 2  # both budgeted retries ran
+
+
+def test_straggler_eviction(setup):
+    cfg, qparams, reqs, buckets, align = setup
+    # round 1 establishes each replica's fast p50; then replica 0 stalls
+    # on every batch it executes — consecutive flags evict it
+    chaos = FaultInjector(FaultSpec(kind="stall", at_batch=len(reqs),
+                                    replica=0, stall_s=0.5, repeat=16))
+    srv = _server(setup, replicas=3, chaos=chaos,
+                  straggler_tolerance=2.0, straggler_strikes=2)
+    _rounds(srv, reqs, 2)
+    st = srv.stats
+    assert st.replicas_evicted >= 1, (
+        f"persistently stalled replica not evicted (fired="
+        f"{len(chaos.fired)})")
+    assert st.replicas_live == 2
+    assert 0 not in srv._router.replicas
+
+
+def test_add_replica_rejoins(setup):
+    srv = _server(setup, replicas=3)
+    reqs = setup[2]
+    _rounds(srv, reqs, 1)
+    srv.mark_failed(1)
+    assert srv.stats.replicas_live == 2
+    assert srv.add_replica(1) == 1
+    assert srv.stats.replicas_live == 3
+    assert srv.add_replica() == 3  # default: next id above the max
+    _rounds(srv, reqs, 1)  # traffic still completes on the grown fleet
+
+
+def test_shed_carries_retry_after_hint(setup):
+    reqs = setup[2]
+    srv = _server(setup, replicas=3,
+                  admission=AdmissionPolicy(max_depth=2, on_full="reject"))
+    assert srv.submit(_fresh(reqs[0])) is not None
+    assert srv.submit(_fresh(reqs[1])) is not None
+    assert srv.submit(_fresh(reqs[2])) is None  # shed
+    st = srv.stats
+    assert st.requests_shed == 1
+    assert math.isfinite(st.retry_after_s) and st.retry_after_s > 0
+    assert st.summary()["retry_after_s"] > 0
+    # the raising path (direct batcher add) carries the same hint, with
+    # the policy reason string kept stable for histogramming
+    with pytest.raises(AdmissionError, match="max_depth=2") as e:
+        srv.batcher.add(_fresh(reqs[2]))
+    assert e.value.retry_after_s is not None
+    assert math.isfinite(e.value.retry_after_s) and e.value.retry_after_s > 0
+    assert "retry after" in str(e.value)
+    assert "retry" not in e.value.reason
+
+
+def test_shed_reason_histogram_stable(setup):
+    reqs = setup[2]
+    srv = _server(setup, replicas=3,
+                  admission=AdmissionPolicy(max_depth=2, on_full="reject"))
+    for _ in range(3):
+        for r in reqs:
+            srv.submit(_fresh(r))
+        srv.drain()
+    st = srv.stats
+    assert st.requests_shed > 0
+    # one stable reason string no matter how many sheds or what the
+    # retry hint was at each — the histogram must not grow per event
+    assert set(st.shed_reasons) == {"queue depth at max_depth=2"}
+    assert sum(st.shed_reasons.values()) == st.requests_shed
+
+
+def test_block_mode_progress_during_failover(setup):
+    # backpressured submits spin the engine; a replica dying mid-drain
+    # must not livelock them (backoff is accounted, never slept)
+    reqs = setup[2]
+    chaos = FaultInjector("kill@1")
+    srv = _server(setup, replicas=3, chaos=chaos,
+                  admission=AdmissionPolicy(max_depth=2, on_full="block"))
+    ids = [srv.submit(_fresh(r)) for r in reqs]
+    got = srv.drain()
+    assert set(ids) <= set(got)
+    assert len(got) == len(reqs)
+    assert srv.stats.replica_faults == 1
+    assert srv.stats.requests_shed == 0  # block mode: nobody shed
+    assert srv.stats.submit_blocked > 0
