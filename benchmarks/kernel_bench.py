@@ -10,16 +10,20 @@ across PRs.
 
 Record schema (one dict per timed configuration):
   op         — bgemm | bitserial_gemm | bitserial_fused | serve_forward
-               | serve_overload | serve_shuffled
+               | serve_overload | serve_shuffled | train_step
   bits       — operand bitwidth (feature bits for the serve_* ops)
   sparsity   — zeroed fraction of A's reduction dim (tile-aligned band),
                or the measured zero-tile skip ratio for the serve_* ops
   jump       — none | mask | compact | sgt
-  median_ms  — kernel median wall ms (serve: median batch latency)
+  median_ms  — kernel median wall ms (serve: median batch latency;
+               train: median steady-state step, host wall incl. batch prep)
   nodes_per_s — serving throughput (serve_* records)
   pattern    — "scattered" on the SGT-vs-compact cells (bench_sgt): the
                zero words are spread so every k-tile stays occupied —
                compact jumping cannot skip, sparse-graph translation can
+  phase/arm  — train_step records carry phase="train" and arm="fake"|"int"
+               (the QAT fake-quant step vs the integer bitserial step);
+               the int arm is gated <= fake x noise margin as it is timed
   serve_overload adds arm/admitted/shed/req_p95_ms; serve_shuffled adds
   cache_hit_rate and full/partial hit-batch counts (docs/benchmarks.md)
 """
@@ -253,10 +257,92 @@ def bench_serve(smoke: bool = False) -> list[dict]:
             + failover_arm(scale=0.008, parts_k=16, rounds=4))
 
 
+def bench_train(smoke: bool = False) -> list[dict]:
+    """Per-step training time: QAT fake-quant vs the integer bitserial path.
+
+    Times the STEADY-STATE step of both training arms on the Table 2
+    harness (Cluster-GCN, proteins) — host wall per step including
+    whatever per-step batch work each arm actually does: the fake arm
+    rebuilds its dense device batch every step (the pre-existing harness
+    behavior), the int arm hits its per-batch artifact cache. Warmup steps
+    absorb compilation and artifact builds. The int arm is gated faster
+    (x noise margin in smoke, strictly in full runs) — the acceptance
+    claim of the int_bitserial training path, re-checked as it is timed.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.graph import partition
+    from repro.graph.batching import batch_iterator
+    from repro.graph.datasets import load as load_dataset
+    from repro.models import gnn
+    from repro.train import intpath, trainer
+    from repro.train import optimizer as opt
+
+    scale, warm, steps = (0.05, 4, 12) if smoke else (0.1, 8, 40)
+    bits = 4
+    data = load_dataset("proteins", scale=scale, seed=0)
+    parts = partition.partition(data.csr, 8)
+    cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1],
+                                  int(data.labels.max()) + 1, bits, bits)
+    ocfg = opt.AdamWConfig(lr=1e-2, weight_decay=1e-4, grad_clip=1.0)
+    batches = trainer.prepare_batches(data, parts, batch_size=4)
+    records: list[dict] = []
+    arm_ms: dict[str, float] = {}
+    for arm in ("fake", "int"):
+        params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+        ostate = opt.adamw_init(params)
+        if arm == "int":
+            bp, rp = intpath.batch_caps(batches)
+            cache = intpath.ArtifactCache(cfg.x_bits, block_pad=bp,
+                                          rem_pad=rp)
+            dev: dict[int, dict] = {}
+            sr_key = jax.random.PRNGKey(1)
+        times = []
+        loss = None
+        for step, batch in batch_iterator(batches, epochs=None, seed=0):
+            if step >= warm + steps:
+                break
+            t0 = _time.perf_counter()
+            if arm == "int":
+                db = dev.get(id(batch))
+                if db is None:
+                    db = {"art": cache.get(batch),
+                          "y": jnp.asarray(batch.labels),
+                          "mask": jnp.asarray(batch.train_mask)}
+                    dev[id(batch)] = db
+                params, ostate, _, loss, _ = trainer._train_step_int(
+                    params, ostate, None, db, sr_key, jnp.uint32(step),
+                    cfg, ocfg, 0, False, 0, None)
+            else:
+                db = trainer.make_device_batch(batch)
+                params, ostate, loss, _ = trainer._train_step(
+                    params, ostate, db, cfg, ocfg, True)
+            jax.block_until_ready(loss)
+            if step >= warm:
+                times.append(_time.perf_counter() - t0)
+        assert np.isfinite(float(loss)), f"train arm {arm} diverged"
+        ms = float(np.median(times)) * 1e3
+        arm_ms[arm] = ms
+        records.append({
+            "op": "train_step", "bits": bits, "sparsity": 0.0,
+            "jump": "none", "median_ms": round(ms, 3), "phase": "train",
+            "arm": arm, "dataset": "proteins", "steps": steps,
+        })
+        emit(f"train_step_{arm}_{bits}b", round(ms, 3), "ms", phase="train")
+    margin = 1.25 if smoke else 1.0  # smoke: shared-CI noise
+    assert arm_ms["int"] <= arm_ms["fake"] * margin, (
+        f"int training step ({arm_ms['int']:.3f}ms) lost to the fake-quant "
+        f"step ({arm_ms['fake']:.3f}ms)")
+    return records
+
+
 def main(smoke: bool = False) -> list[dict]:
     records = bench_gemms(smoke=smoke)
     records += bench_sgt(smoke=smoke)
     records += bench_serve(smoke=smoke)
+    records += bench_train(smoke=smoke)
     return records
 
 

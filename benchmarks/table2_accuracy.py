@@ -3,6 +3,12 @@
 Reproduces the TREND: fp32 ~ 16b ~ 8b >> 4b > 2b. SBM re-creations at
 --scale; absolute numbers differ from the paper's real graphs, the
 monotone degradation and the 8-bit "free lunch" are the claims validated.
+
+Each quantized cell additionally trains an ``int`` arm through the integer
+bitserial path (path="int_bitserial", stochastic rounding) — the accuracy
+side of the int-path acceptance claim: matched test accuracy at the same
+step budget, while BENCH_kernels.json's phase="train" records carry the
+speed side.
 """
 from __future__ import annotations
 
@@ -34,6 +40,16 @@ def main(scale: float = 0.01, steps: int = 120):
             acc = trainer.evaluate(params, data, parts, cfg, qat=qat)
             emit(f"table2_{name}_{bits}", round(acc, 4), "test_acc",
                  final_loss=round(hist[-1]["loss"], 4))
+            if bits == "fp32":
+                continue
+            params, _, hist = trainer.train(
+                data, parts, cfg,
+                trainer.TrainConfig(steps=steps, log_every=steps,
+                                    path="int_bitserial", stochastic=True),
+                batch_size=4)
+            acc_i = trainer.evaluate(params, data, parts, cfg, qat=True)
+            emit(f"table2_{name}_{bits}_int", round(acc_i, 4), "test_acc",
+                 final_loss=round(hist[-1]["loss"], 4), arm="int")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,11 @@ The full paper pipeline: partition -> batch -> QAT train -> quantize ->
 serve with packed transfers + zero-tile accounting.
 
 Run:  PYTHONPATH=src python examples/train_cluster_gcn.py [--steps 200]
+      (add --int-path to train through the integer bitserial kernels)
 """
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -24,6 +26,13 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--parts", type=int, default=16)
+    ap.add_argument("--int-path", action="store_true",
+                    help="train through the integer bitserial forward "
+                         "(path='int_bitserial') instead of fake-quant QAT")
+    ap.add_argument("--grad-bits", type=int, default=0,
+                    help="int path: also quantize backward GEMMs")
+    ap.add_argument("--stochastic", action="store_true",
+                    help="int path: stochastic rounding of activations/grads")
     args = ap.parse_args()
 
     print(f"# loading {args.dataset} (scale={args.scale})")
@@ -40,13 +49,19 @@ def main():
 
     cfg = gnn.GNNConfig.paper_gcn(data.features.shape[1], data.n_classes,
                                   x_bits=args.bits, w_bits=args.bits)
-    print(f"# QAT training: 3-layer GCN, 16 hidden, {args.bits}-bit")
-    params, _, hist = trainer.train(
-        data, parts, cfg,
-        trainer.TrainConfig(steps=args.steps, log_every=max(args.steps // 8, 1)),
-        batch_size=4)
+    mode = "integer bitserial" if args.int_path else "QAT (fake-quant)"
+    print(f"# {mode} training: 3-layer GCN, 16 hidden, {args.bits}-bit")
+    tcfg = trainer.TrainConfig(
+        steps=args.steps, log_every=max(args.steps // 8, 1),
+        path="int_bitserial" if args.int_path else "fake",
+        grad_bits=args.grad_bits, stochastic=args.stochastic)
+    t_train = time.time()
+    params, _, hist = trainer.train(data, parts, cfg, tcfg, batch_size=4)
+    t_train = time.time() - t_train
     for rec in hist:
         print(f"#   {json.dumps(rec)}")
+    print(f"#   {t_train:.1f}s total, {t_train / max(args.steps, 1) * 1e3:.2f}"
+          f" ms/step incl. compile")
 
     acc_fp = trainer.evaluate(params, data, parts, cfg, qat=True)
     print(f"# QAT test accuracy: {acc_fp:.4f}")

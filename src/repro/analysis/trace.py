@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["run_trace_checks", "check_backend", "check_policy_sites",
-           "iter_jaxprs", "float_eqns", "main"]
+           "check_train_path", "iter_jaxprs", "float_eqns", "main"]
 
 # container/structural primitives may carry float avals through to a
 # sub-jaxpr or shuffle epilogue values without doing float MATH; the fused
@@ -274,6 +274,73 @@ def check_policy_sites(paths=None, rel_root=None) -> tuple:
     return len(sites), dynamic, fails
 
 
+def check_train_path(*, bits=(4, 8), log=lambda *_: None) -> tuple:
+    """Prove the int_bitserial TRAINING forward contains no float GEMM.
+
+    Abstract-traces ``models.gnn.forward_int`` over synthetic
+    IntBatchArtifacts for every registered backend and asserts no
+    ``dot_general``/``conv_general_dilated`` operates on float avals:
+    every matmul in the training forward — feature/weight GEMMs and both
+    halves of the blocked aggregation — must run on integers. Float is
+    expected (and allowed) in the affine-correction/requantize epilogues
+    and the loss; the claim the int path makes is about the GEMMs.
+    """
+    from repro import api
+    from repro.core.quantize import QuantParams
+    from repro.models import gnn
+    from repro.train.intpath import IntBatchArtifacts
+
+    bcount, p, d = 2, 32, 32
+    n = bcount * p
+    rng = np.random.default_rng(0)
+    adj_blocks = rng.integers(0, 2, (bcount, p, p)).astype(np.int32)
+    rem = -np.ones(16, np.int32)
+    rem[:4] = [0, 1, p, p + 1]
+    deg = adj_blocks.sum(axis=2).reshape(n, 1).astype(np.float32)
+    checks, fails = 0, []
+    for nbits in bits:
+        art = IntBatchArtifacts(
+            adjb=jnp.asarray(adj_blocks),
+            row_idx=jnp.arange(n, dtype=jnp.int32).reshape(bcount, p),
+            rem_src=jnp.asarray(rem), rem_dst=jnp.asarray(rem),
+            deg=jnp.asarray(deg), deg_in=jnp.asarray(deg),
+            inv_deg=jnp.asarray(1.0 / (deg + 1.0)),
+            xq=jnp.asarray(rng.integers(0, 1 << nbits, (n, d)), jnp.int32),
+            qpx=QuantParams(nbits=nbits, scale=jnp.float32(0.1),
+                            zero=jnp.float32(0.0)),
+            tiles=None, s_maxes=None)
+        cfg = gnn.GNNConfig.paper_gcn(d, 10, x_bits=nbits, w_bits=nbits)
+        params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+        for name in api.list_backends():
+            targets = {
+                f"train:{name}:forward_int:{nbits}b":
+                    lambda pr, n=name: gnn.forward_int(pr, art, cfg,
+                                                       backend=n),
+                # with grad_bits > 0 the BACKWARD GEMMs are bitserial too,
+                # so the whole VJP must trace without a float GEMM
+                f"train:{name}:grad:{nbits}b":
+                    lambda pr, n=name: jax.grad(lambda p: jnp.sum(
+                        gnn.forward_int(p, art, cfg, backend=n,
+                                        grad_bits=nbits)))(pr),
+            }
+            for label, fn in targets.items():
+                checks += 1
+                try:
+                    jaxpr = jax.make_jaxpr(fn)(params)
+                except Exception as e:
+                    fails.append(f"{label}: trace failed: "
+                                 f"{type(e).__name__}: {e}")
+                    continue
+                for prim, _ in float_eqns(jaxpr):
+                    if prim in _GEMM_PRIMS:
+                        fails.append(
+                            f"{label}: {prim!r} runs in float — the int "
+                            f"training path must keep every GEMM integer")
+    fails = sorted(set(fails))
+    log(f"[trace] train path: {checks} checks, {len(fails)} failures")
+    return checks, fails
+
+
 def run_trace_checks(backends=None, *, bits=range(1, 9), shape=(16, 256, 128),
                      log=print) -> dict:
     """Full sweep: every (probed) backend x op x bit width, plus the
@@ -296,6 +363,10 @@ def run_trace_checks(backends=None, *, bits=range(1, 9), shape=(16, 256, 128),
     report["failures"].extend(site_fails)
     log(f"[trace] policy sites: {n_sites - dynamic} validated, "
         f"{dynamic} dynamic")
+    t_checks, t_fails = check_train_path(log=log)
+    report["train_path"] = {"checks": t_checks, "failures": len(t_fails)}
+    report["checks"] += t_checks
+    report["failures"].extend(t_fails)
     return report
 
 

@@ -49,9 +49,20 @@ class XlaDotBackend(Backend):
     max_bits = 32
 
     def bitserial_mm_vals(self, aq, bq, s, t, *, policy):
-        from repro.core import bitops
-
-        return bitops.bitserial_matmul_planes(aq, bq, s, t)
+        # One wide int32 dot over the bit-masked values. Algebraically
+        # identical to the per-plane decomposition for EVERY int32 input —
+        # plane i of bit_decompose reads exactly bit i, so the plane sum
+        # only ever sees bits 0..s-1, which is what the mask keeps — but a
+        # single dot_general instead of s*t int8 ones, which is what makes
+        # the integer TRAINING path viable. The packed entry below keeps
+        # the plane loop: that is the MXU-emulation semantics this backend
+        # exists to model; unpacked values already paid materialization,
+        # so the decomposition would be pure overhead.
+        mask_a = (1 << s) - 1 if s < 32 else -1
+        mask_b = (1 << t) - 1 if t < 32 else -1
+        return jax.lax.dot_general(
+            jnp.bitwise_and(aq, mask_a), jnp.bitwise_and(bq, mask_b),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
 
     def bitserial_mm(self, a_packed, b_packed, *, policy):
         from repro.core import bitops

@@ -21,6 +21,7 @@ __all__ = [
     "QuantParams",
     "calibrate",
     "quantize",
+    "quantize_stochastic",
     "dequantize",
     "fake_quant",
     "affine_matmul_correction",
@@ -65,6 +66,21 @@ def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
     """Eq. 2: floor((x - a_min)/scale), clipped to the q-bit range, int32."""
     q = jnp.floor((x - qp.zero) / qp.scale)
     return jnp.clip(q, 0, qp.qmax).astype(jnp.int32)
+
+
+def quantize_stochastic(x: jax.Array, qp: QuantParams, key: jax.Array) -> jax.Array:
+    """Eq. 2 with stochastic rounding: floor((x - a_min)/scale + u), u~U[0,1).
+
+    E[dequantize(q)] == clip(x) — the rounding error is zero-mean instead of
+    systematic, which is what lets fully-quantized training (Tango,
+    arXiv 2308.00890) match fake-quant accuracy: biased floor-rounding of
+    activations/gradients accumulates across steps, stochastic rounding
+    does not. Same clip range and dtype as :func:`quantize`; with
+    ``u == 0`` it degenerates to the deterministic quantizer.
+    """
+    v = (x - qp.zero) / qp.scale
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    return jnp.clip(jnp.floor(v + u), 0, qp.qmax).astype(jnp.int32)
 
 
 def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:

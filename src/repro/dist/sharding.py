@@ -30,8 +30,9 @@ __all__ = ["make_rules", "shard_ctx", "current_ctx", "constrain",
 # lm.init_decode_cache.  tests/test_sharding_rules.py asserts this list
 # (and the rule tables) stay in sync with the model sources.
 LOGICAL_AXES = (
-    # batch-like (data-parallel) axes
-    "batch", "moe_group", "cache_batch",
+    # batch-like (data-parallel) axes; gnn_nodes is the node dim of a
+    # subgraph batch (models/gnn.py int_bitserial path activations)
+    "batch", "moe_group", "cache_batch", "gnn_nodes",
     # tensor-parallel param axes
     "vocab", "qkv", "mlp", "embed2", "heads", "kv_heads",
     "experts", "expert_mlp", "expert_embed",
@@ -66,6 +67,7 @@ def make_rules(mode: str, *, multi_pod: bool = False,
         "batch": dp,
         "moe_group": dp,
         "cache_batch": dp,
+        "gnn_nodes": dp,
         # megatron TP: shard the "compute" dim of each projection pair
         "vocab": "model",
         "vocab_act": "model",

@@ -8,6 +8,7 @@ adjacency aligns with the kernel BlockSpecs.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Iterator
 
 import numpy as np
@@ -30,6 +31,13 @@ class SubgraphBatch:
     train_mask: np.ndarray   # (n_nodes,) bool
     node_ids: np.ndarray     # (n_nodes,) original ids, -1 padded
     n_edges: int
+    # per-member-partition node counts, in concatenation order. Nodes are
+    # laid out partition-by-partition, so cumsum(part_sizes) gives the
+    # diagonal-block boundaries of the batch adjacency — the structure the
+    # integer training path's blocked aggregation consumes. None for
+    # batches built by older callers; consumers must fall back to treating
+    # the whole batch as one block (always correct, just no block skipping).
+    part_sizes: np.ndarray | None = None
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -52,7 +60,9 @@ def make_batches(
     batches = []
     for b0 in range(0, k, batch_size):
         group = order[b0:b0 + batch_size]
-        nodes = np.concatenate([np.where(parts == p)[0] for p in group])
+        members = [np.where(parts == p)[0] for p in group]
+        nodes = np.concatenate(members)
+        sizes = np.array([len(m) for m in members], np.int32)
         sub = data.csr.subgraph(nodes)
         el = sub.edge_list().astype(np.int32)
         n_pad = _pad_to(max(sub.n, 1), tile)
@@ -69,21 +79,28 @@ def make_batches(
         ids = -np.ones(n_pad, np.int32)
         ids[:sub.n] = nodes
         batches.append(SubgraphBatch(el, n_pad, sub.n, feats, labels, mask,
-                                     ids, sub.e))
+                                     ids, sub.e, part_sizes=sizes))
     return batches
 
 
-def batch_iterator(batches: list[SubgraphBatch], epochs: int, seed: int = 0
-                   ) -> Iterator[tuple[int, SubgraphBatch]]:
+def batch_iterator(batches: list[SubgraphBatch], epochs: int | None = None,
+                   seed: int = 0) -> Iterator[tuple[int, SubgraphBatch]]:
     """Deterministic, step-resumable iterator: step -> batch mapping is pure.
+
+    ``epochs=None`` iterates forever — the training loop owns the stop
+    condition (it breaks on its step budget), so the iterator does not fake
+    infinity with a huge epoch count. A finite ``epochs`` yields exactly
+    ``epochs * len(batches)`` steps.
 
     The epoch permutation is drawn once per epoch (not re-generated every
     step); the (seed, epoch) -> order mapping is unchanged, so the yielded
-    sequence is identical to the per-step formulation.
+    sequence is identical to the per-step formulation, and a finite prefix
+    of the infinite mode equals the finite mode.
     """
     n = len(batches)
     step = 0
-    for epoch in range(epochs):
+    epoch_range = itertools.count() if epochs is None else range(epochs)
+    for epoch in epoch_range:
         order = np.random.default_rng(seed + epoch).permutation(n)
         for i in range(n):
             yield step, batches[int(order[i])]

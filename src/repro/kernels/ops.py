@@ -27,7 +27,7 @@ from repro.kernels import sgt as _sgt
 from repro.kernels import wqmm as _wqmm
 
 __all__ = ["bgemm", "bitserial_gemm", "bitserial_fused", "bitpack",
-           "wq_gemm", "auto_interpret"]
+           "wq_gemm", "edge_scatter_sum", "auto_interpret"]
 
 
 def auto_interpret() -> bool:
@@ -352,3 +352,22 @@ def wq_gemm(
     kw = _resolve(policy, interpret=interpret)
     return _wq_gemm_call(x, w_packed, scales, group=group, block_m=block_m,
                          block_n=block_n, block_k=block_k, **kw)
+
+
+def edge_scatter_sum(values: jax.Array, src: jax.Array, dst: jax.Array,
+                     n_out: int) -> jax.Array:
+    """Edge-list aggregation: out[dst[e]] += values[src[e]], -1-padded edges.
+
+    Dtype-preserving (int32 in -> int32 out), so the integer training path
+    can fold a sparse remainder — the few cross-partition edges its blocked
+    per-partition GEMMs do not cover — into the exact integer neighbor sum
+    without leaving the integer domain. XLA's native gather/scatter is the
+    right engine for a few-thousand-edge remainder on every backend (a
+    Pallas scatter kernel would be all grid overhead at this size); keeping
+    the seam here means a TPU kernel can replace it without touching
+    callers.
+    """
+    valid = (src >= 0)[:, None]
+    msgs = jnp.where(valid, values[jnp.clip(src, 0)], 0)
+    out = jnp.zeros((n_out,) + values.shape[1:], values.dtype)
+    return out.at[jnp.clip(dst, 0)].add(msgs)

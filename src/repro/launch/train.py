@@ -16,6 +16,12 @@ exercised by dryrun.py). The loop structure is the 1000-node posture:
 Example (CPU-scale):
   PYTHONPATH=src python -m repro.launch.train --arch rwkv6-1.6b --smoke \
       --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+GNN archs (qgtc-gcn / qgtc-gin) take the same resume/failure-injection
+loop over Cluster-GCN subgraph batches; ``--int-path`` trains through the
+integer bitserial forward (repro.train path="int_bitserial"):
+  PYTHONPATH=src python -m repro.launch.train --arch qgtc-gcn --smoke \
+      --steps 30 --int-path --ckpt-dir /tmp/gnn-ckpt
 """
 from __future__ import annotations
 
@@ -40,6 +46,106 @@ from repro.train import data as data_lib
 from repro.train import optimizer as opt
 
 
+def _train_gnn(cfg, args) -> dict:
+    """Cluster-GCN training with the LM launcher's resume/failure posture.
+
+    Same loop contract as the LM branch: deterministic (seed, step) ->
+    batch stream (resume just skips consumed steps), atomic checkpoints,
+    --simulate-failure-at hard exit, straggler watchdog. ``--int-path``
+    swaps the QAT fake-quant step for the integer bitserial step over
+    per-batch cached artifacts.
+    """
+    from repro.graph import partition
+    from repro.graph.batching import batch_iterator
+    from repro.graph.datasets import load as load_dataset
+    from repro.models import gnn
+    from repro.train import intpath, trainer
+
+    scale = min(args.scale, 0.05) if args.smoke else args.scale
+    data = load_dataset(args.dataset, scale=scale, seed=args.seed)
+    parts = partition.partition(data.csr, args.parts)
+    cfg = dataclasses.replace(cfg, in_dim=data.features.shape[1],
+                              n_classes=int(data.labels.max()) + 1)
+    tcfg = trainer.TrainConfig(
+        steps=args.steps, lr=args.lr, seed=args.seed,
+        log_every=args.log_every,
+        path="int_bitserial" if args.int_path else "fake",
+        grad_bits=args.grad_bits, stochastic=args.stochastic,
+        grad_compress_bits=args.grad_compress_bits)
+    ocfg = opt.AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay,
+                           grad_clip=1.0)
+    cfg_hash = ckpt.config_hash((cfg, tcfg, ocfg))
+
+    params = gnn.init_params(jax.random.PRNGKey(args.seed), cfg)
+    ostate = opt.adamw_init(params)
+    # EF residuals are NOT checkpointed (like the LM branch): after a
+    # restart compression re-warms from zero residual, which only re-biases
+    # the first post-resume step by one quantization error.
+    cstate = (opt.compression_init(params) if tcfg.grad_compress_bits
+              else None)
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        (params, ostate), manifest = ckpt.restore(
+            args.ckpt_dir, (params, ostate), cfg_hash=cfg_hash)
+        start_step = manifest["step"]
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    batches = trainer.prepare_batches(data, parts, batch_size=4)
+    use_int = tcfg.path == "int_bitserial"
+    if use_int:
+        bp, rp = intpath.batch_caps(batches)
+        cache = intpath.ArtifactCache(cfg.x_bits, block_pad=bp, rem_pad=rp)
+        dev_batches: dict[int, dict] = {}
+    sr_key = jax.random.PRNGKey(args.seed + 0x5eed)
+    watchdog = StragglerWatchdog()
+    history = []
+    for step, batch in batch_iterator(batches, epochs=None, seed=args.seed):
+        if step >= args.steps:
+            break
+        if step < start_step:
+            continue  # deterministic stream: resume = skip consumed steps
+        t0 = time.time()
+        if use_int:
+            dbatch = dev_batches.get(id(batch))
+            if dbatch is None:
+                dbatch = {"art": cache.get(batch),
+                          "y": jnp.asarray(batch.labels),
+                          "mask": jnp.asarray(batch.train_mask)}
+                dev_batches[id(batch)] = dbatch
+            params, ostate, cstate, loss, acc = trainer._train_step_int(
+                params, ostate, cstate, dbatch, sr_key, jnp.uint32(step),
+                cfg, ocfg, tcfg.grad_bits, tcfg.stochastic,
+                tcfg.grad_compress_bits, None)
+        else:
+            dbatch = trainer.make_device_batch(batch)
+            params, ostate, loss, acc = trainer._train_step(
+                params, ostate, dbatch, cfg, ocfg, tcfg.qat)
+        loss = float(loss)
+        wall = time.time() - t0
+        straggle = watchdog.observe(step, wall)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            rec = {"step": step, "loss": round(loss, 4),
+                   "acc": round(float(acc), 4), "wall_s": round(wall, 3),
+                   "straggler": straggle}
+            history.append(rec)
+            print(f"[train] {json.dumps(rec)}", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, ostate),
+                      cfg_hash=cfg_hash)
+        if args.simulate_failure_at == step:
+            print(f"[train] SIMULATED FAILURE at step {step}", flush=True)
+            sys.exit(17)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, (params, ostate),
+                  cfg_hash=cfg_hash)
+    test_acc = trainer.evaluate(params, data, parts, cfg, qat=True)
+    print(f"[train] done: test_acc={test_acc:.4f} p50={watchdog.p50:.3f}s "
+          f"p95={watchdog.p95:.3f}s flagged={len(watchdog.flagged)}",
+          flush=True)
+    return {"history": history, "test_acc": test_acc,
+            "final_loss": history[-1]["loss"] if history else None}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -60,9 +166,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--grad-compress-bits", type=int, default=0,
                     help="int8/int4 error-feedback gradient compression for "
                          "the DP reduction (0 = off)")
+    # GNN-arch (qgtc-*) options
+    ap.add_argument("--dataset", default="proteins")
+    ap.add_argument("--scale", type=float, default=0.1,
+                    help="GNN dataset subsample fraction")
+    ap.add_argument("--parts", type=int, default=8,
+                    help="Cluster-GCN partition count")
+    ap.add_argument("--int-path", action="store_true",
+                    help="GNN: train through the integer bitserial forward")
+    ap.add_argument("--grad-bits", type=int, default=0,
+                    help="GNN int path: quantize backward GEMMs (0 = float)")
+    ap.add_argument("--stochastic", action="store_true",
+                    help="GNN int path: stochastic rounding")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
+    from repro.models import gnn
+    if isinstance(cfg, gnn.GNNConfig):
+        return _train_gnn(cfg, args)
     if args.smoke:
         cfg = smoke_config(cfg)
     mesh = make_local_mesh(model=args.model_parallel)

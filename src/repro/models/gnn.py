@@ -9,6 +9,12 @@ Each model has three execution paths sharing one parameter pytree:
                activations/weights, integer bit-serial GEMMs with float
                rescale epilogues (Algorithm 1 + §4.5). Hidden layers
                requantize; only the final layer emits full precision.
+  int_bitserial — the TRAINING twin of qgtc: same integer forward, but
+               differentiable (api.nn.qlinear_train / qgraph_conv_train
+               custom_vjps with STE backward, optional quantized gradients
+               + stochastic rounding) and fed by per-batch cached
+               IntBatchArtifacts (repro.train.intpath) instead of a dense
+               adjacency rebuilt every step.
 
 The qgtc path is built from the functional layers in ``repro.api.nn``
 (``qlinear`` / ``qgraph_conv``), which dispatch through the repro.api
@@ -35,8 +41,10 @@ import jax.numpy as jnp
 
 from repro.api import nn as qnn
 from repro.core.quantize import QuantParams, calibrate, fake_quant, quantize
+from repro.models.layers import constrain  # no-op outside repro.dist shard_ctx
 
-__all__ = ["GNNConfig", "init_params", "forward", "forward_qgtc", "quantize_params"]
+__all__ = ["GNNConfig", "init_params", "forward", "forward_int",
+           "forward_qgtc", "quantize_params"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,8 +118,21 @@ def forward(
     cfg: GNNConfig,
     path: str = "fp32_dense",
     fake_bits: bool = False,
+    **int_kw,
 ) -> jax.Array:
-    """fp32 forward (optionally QAT-fake-quantized). inv_deg: (N, 1)."""
+    """fp32 forward (optionally QAT-fake-quantized). inv_deg: (N, 1).
+
+    ``path="int_bitserial"`` dispatches to :func:`forward_int`:
+    ``adj_or_edges`` must then be a ``repro.train.intpath.IntBatchArtifacts``
+    (``x``/``inv_deg`` are ignored — features and degrees live in the
+    artifacts) and ``int_kw`` forwards grad_bits/stochastic/key/backend/
+    policy. The fake-quant path quantizes exactly where the integer paths
+    do — including the pre-aggregation requant of ``u`` — so the two
+    compute the same function up to GEMM rounding, which is what the
+    gradient-parity oracle in tests/test_int_train.py pins down.
+    """
+    if path == "int_bitserial":
+        return forward_int(params, adj_or_edges, cfg, **int_kw)
     agg = _aggregate_dense if path == "fp32_dense" else _aggregate_csr
     h = x
     for l in range(cfg.layers):
@@ -132,8 +153,62 @@ def forward(
         else:  # cluster-GCN: update THEN aggregate (paper §6.2)
             w = fake_quant(p["w"], cfg.w_bits) if fake_bits else p["w"]
             u = h @ w + p["b"]
+            if fake_bits:
+                # the integer paths aggregate QUANTIZED u (forward_qgtc
+                # requants before qgraph_conv; qgraph_conv_train quantizes
+                # in-trace) — fake-quant here too so QAT trains the same
+                # function the integer paths execute
+                u = fake_quant(u, cfg.x_bits)
             h = agg(adj_or_edges, u, inv_deg)
         if not last:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ----------------------------------------------------------- training int path
+
+def forward_int(
+    params: dict,
+    art,
+    cfg: GNNConfig,
+    *,
+    grad_bits: int = 0,
+    stochastic: bool = False,
+    key: jax.Array | None = None,
+    backend=None,
+    policy=None,
+) -> jax.Array:
+    """Differentiable integer forward over cached batch artifacts.
+
+    The float-parameter twin of :func:`forward_qgtc`: weights are quantized
+    in-trace by the custom_vjp layers (so ``jax.grad`` reaches them through
+    STE), activations flow quantized through the same bitserial GEMMs, and
+    the aggregation runs blocked over ``art``'s per-partition diagonal
+    blocks + cross-block edge remainder. Layer 0 consumes the batch
+    features pre-quantized once in ``art`` (``xq, qpx``) — no per-step
+    feature requant. ``grad_bits > 0`` quantizes the backward GEMMs too;
+    ``stochastic`` enables stochastic rounding (requires ``key``, split
+    per layer so no two quantizers share randomness).
+    """
+    if cfg.model != "gcn":
+        raise NotImplementedError(
+            "int_bitserial training path covers cluster-GCN; GIN still "
+            "trains via the fake-quant path (its eps-weighted self term "
+            "needs a float epilogue the train kernels do not fuse yet)")
+    mm = dict(backend=backend, policy=policy)
+    keys = (jax.random.split(key, cfg.layers * 2)
+            if key is not None else [None] * (cfg.layers * 2))
+    h = (art.xq, art.qpx)
+    for l in range(cfg.layers):
+        p = params[f"layer{l}"]
+        u = qnn.qlinear_train(h, p["w"], p["b"], x_bits=cfg.x_bits,
+                              w_bits=cfg.w_bits, grad_bits=grad_bits,
+                              stochastic=stochastic, key=keys[2 * l], **mm)
+        u = constrain(u, "gnn_nodes", None)
+        h = qnn.qgraph_conv_train(u, art, x_bits=cfg.x_bits,
+                                  grad_bits=grad_bits, stochastic=stochastic,
+                                  key=keys[2 * l + 1], **mm)
+        if l != cfg.layers - 1:
             h = jax.nn.relu(h)
     return h
 

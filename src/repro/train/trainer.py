@@ -3,6 +3,17 @@
 The step function is jit'd per (n_nodes, e_cap) bucket; batches are padded
 by the graph substrate so one bucket dominates. Masked cross-entropy over
 train nodes; accuracy on the complement.
+
+Two training paths share the loop and the parameter pytree:
+
+  path="fake"           QAT: fp32 GEMMs over fake-quantized tensors (STE).
+  path="int_bitserial"  the integer path: forward GEMMs run as bitserial
+                        integer products via models.gnn.forward_int over
+                        per-batch cached IntBatchArtifacts — no per-step
+                        dense adjacency rebuild, blocked aggregation,
+                        optional quantized/stochastically-rounded backward
+                        (grad_bits/stochastic) and error-feedback gradient
+                        compression (grad_compress_bits).
 """
 from __future__ import annotations
 
@@ -19,7 +30,8 @@ from repro.graph.sparse import sparse_to_dense
 from repro.models import gnn
 from repro.train import optimizer as opt
 
-__all__ = ["TrainConfig", "train", "evaluate", "loss_fn", "make_device_batch"]
+__all__ = ["TrainConfig", "train", "evaluate", "loss_fn",
+           "make_device_batch", "prepare_batches"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +42,11 @@ class TrainConfig:
     qat: bool = True
     log_every: int = 25
     seed: int = 0
+    path: str = "fake"           # "fake" | "int_bitserial"
+    grad_bits: int = 0           # int path: quantize backward GEMMs too
+    stochastic: bool = False     # int path: stochastic rounding (needs key)
+    grad_compress_bits: int = 0  # error-feedback grad compression (0 = off)
+    backend: str | None = None   # api backend override for the int path
 
 
 def make_device_batch(batch: SubgraphBatch):
@@ -47,9 +64,17 @@ def make_device_batch(batch: SubgraphBatch):
     }
 
 
-def loss_fn(params, dbatch, cfg: gnn.GNNConfig, qat: bool):
-    logits = gnn.forward(params, dbatch["adj"], dbatch["x"], dbatch["inv_deg"],
-                         cfg, path="fp32_dense", fake_bits=qat)
+def loss_fn(params, dbatch, cfg: gnn.GNNConfig, qat: bool,
+            path: str = "fake", grad_bits: int = 0, stochastic: bool = False,
+            key=None, backend=None):
+    if path == "int_bitserial":
+        logits = gnn.forward(params, dbatch["art"], None, None, cfg,
+                             path="int_bitserial", grad_bits=grad_bits,
+                             stochastic=stochastic, key=key, backend=backend)
+    else:
+        logits = gnn.forward(params, dbatch["adj"], dbatch["x"],
+                             dbatch["inv_deg"], cfg, path="fp32_dense",
+                             fake_bits=qat)
     y = dbatch["y"]
     valid = (y >= 0) & dbatch["mask"]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
@@ -69,29 +94,78 @@ def _train_step(params, ostate, dbatch, cfg: gnn.GNNConfig,
     return params, ostate, loss, acc
 
 
-def train(data, parts, cfg: gnn.GNNConfig, tcfg: TrainConfig,
-          batch_size: int = 4, tile: int = 128, callback=None):
+@partial(jax.jit, static_argnames=("cfg", "ocfg", "grad_bits", "stochastic",
+                                   "compress_bits", "backend"))
+def _train_step_int(params, ostate, cstate, dbatch, key, step,
+                    cfg: gnn.GNNConfig, ocfg: opt.AdamWConfig,
+                    grad_bits: int, stochastic: bool, compress_bits: int,
+                    backend):
+    k = jax.random.fold_in(key, step) if stochastic else None
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, dbatch, cfg, False, "int_bitserial", grad_bits, stochastic,
+        k, backend)
+    if compress_bits:
+        # per-tensor error feedback: the quantization residual of this
+        # step's gradients is added back next step (Tango-style EF at the
+        # step level — custom_vjps are stateless, the optimizer is not)
+        q, scales, cstate = opt.compress_grads(grads, cstate, compress_bits)
+        grads = opt.decompress_grads(q, scales)
+    params, ostate = opt.adamw_update(params, grads, ostate, ocfg)
+    return params, ostate, cstate, loss, acc
+
+
+def prepare_batches(data, parts, batch_size: int = 4, tile: int = 128):
+    """Training batches padded into ONE (n_nodes, e_cap) jit bucket."""
     from repro.graph.batching import make_batches
 
-    # fixed edge cap => one jit bucket
     batches = make_batches(data, parts, batch_size, tile=tile)
     e_cap = max(b.edges.shape[1] for b in batches)
     n_cap = max(b.n_nodes for b in batches)
-    batches = make_batches(data, parts, batch_size, tile=n_cap,
-                           pad_edges_to=e_cap)
+    return make_batches(data, parts, batch_size, tile=n_cap,
+                        pad_edges_to=e_cap)
+
+
+def train(data, parts, cfg: gnn.GNNConfig, tcfg: TrainConfig,
+          batch_size: int = 4, tile: int = 128, callback=None):
+    batches = prepare_batches(data, parts, batch_size, tile=tile)
     key = jax.random.PRNGKey(tcfg.seed)
     params = gnn.init_params(key, cfg)
     ocfg = opt.AdamWConfig(lr=tcfg.lr, weight_decay=tcfg.weight_decay,
                            grad_clip=1.0)
     ostate = opt.adamw_init(params)
+    use_int = tcfg.path == "int_bitserial"
+    cstate = (opt.compression_init(params) if tcfg.grad_compress_bits
+              else None)
+    sr_key = jax.random.PRNGKey(tcfg.seed + 0x5eed)
+    if use_int:
+        from repro.train import intpath
+
+        # shared caps -> every batch's artifacts land in one jit bucket
+        bp, rp = intpath.batch_caps(batches)
+        cache = intpath.ArtifactCache(cfg.x_bits, block_pad=bp, rem_pad=rp)
+        dev_batches: dict[int, dict] = {}
     history = []
     t0 = time.time()
-    for step, batch in batch_iterator(batches, epochs=10**9, seed=tcfg.seed):
+    for step, batch in batch_iterator(batches, epochs=None, seed=tcfg.seed):
         if step >= tcfg.steps:
             break
-        dbatch = make_device_batch(batch)
-        params, ostate, loss, acc = _train_step(
-            params, ostate, dbatch, cfg, ocfg, tcfg.qat)
+        if use_int:
+            # artifacts (and labels/masks) are built once per BATCH, not
+            # per step — the steady-state step does zero host->device work
+            dbatch = dev_batches.get(id(batch))
+            if dbatch is None:
+                dbatch = {"art": cache.get(batch),
+                          "y": jnp.asarray(batch.labels),
+                          "mask": jnp.asarray(batch.train_mask)}
+                dev_batches[id(batch)] = dbatch
+            params, ostate, cstate, loss, acc = _train_step_int(
+                params, ostate, cstate, dbatch, sr_key, jnp.uint32(step),
+                cfg, ocfg, tcfg.grad_bits, tcfg.stochastic,
+                tcfg.grad_compress_bits, tcfg.backend)
+        else:
+            dbatch = make_device_batch(batch)
+            params, ostate, loss, acc = _train_step(
+                params, ostate, dbatch, cfg, ocfg, tcfg.qat)
         if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
             rec = {"step": step, "loss": float(loss), "acc": float(acc),
                    "elapsed_s": time.time() - t0}
@@ -103,15 +177,30 @@ def train(data, parts, cfg: gnn.GNNConfig, tcfg: TrainConfig,
 
 def evaluate(params, data, parts, cfg: gnn.GNNConfig, batch_size: int = 4,
              tile: int = 128, path: str = "fp32_dense", qat: bool = False):
-    """Test accuracy over all batches (mask = test nodes)."""
+    """Test accuracy over all batches (mask = test nodes).
+
+    ``path="int_bitserial"`` evaluates through the integer training
+    forward (deterministic rounding, float gradients irrelevant) — the
+    honest "what the int path actually computes" accuracy; other paths use
+    the fp32 forward with ``fake_bits=qat``.
+    """
     from repro.graph.batching import make_batches
 
     batches = make_batches(data, parts, batch_size, tile=tile, shuffle=False)
+    if path == "int_bitserial":
+        from repro.train import intpath
+
+        bp, rp = intpath.batch_caps(batches)
     correct = total = 0
     for b in batches:
         db = make_device_batch(b)
-        logits = gnn.forward(params, db["adj"], db["x"], db["inv_deg"], cfg,
-                             path="fp32_dense", fake_bits=qat)
+        if path == "int_bitserial":
+            art = intpath.build_artifacts(b, cfg.x_bits, block_pad=bp,
+                                          rem_pad=rp)
+            logits = gnn.forward_int(params, art, cfg)
+        else:
+            logits = gnn.forward(params, db["adj"], db["x"], db["inv_deg"],
+                                 cfg, path="fp32_dense", fake_bits=qat)
         y = np.asarray(db["y"])
         test = (y >= 0) & ~np.asarray(db["mask"])
         pred = np.asarray(jnp.argmax(logits, -1))

@@ -1,0 +1,102 @@
+"""Integer-path batch artifacts: the decomposition is exact, not approximate.
+
+``blocked_aggregate`` must reproduce the dense integer ``adj @ v`` bit-for-
+bit — blocks + remainder edges partition the edge set, so any mismatch is
+a dropped or double-counted edge. Also pins the cap contract (shared jit
+bucket across batches, loud failure when a cap is too small), the
+once-per-batch artifact cache, and ``batch_iterator``'s real infinite mode.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import batching, datasets, partition
+from repro.train import intpath, trainer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = datasets.load("proteins", scale=0.05, seed=0)
+    parts = partition.partition(data.csr, 8)
+    batches = trainer.prepare_batches(data, parts, batch_size=4)
+    return data, parts, batches
+
+
+def _dense_adj(batch):
+    e = np.asarray(batch.edges)
+    live = e[0] >= 0
+    adj = np.zeros((batch.n_nodes, batch.n_nodes), np.int64)
+    adj[e[0][live], e[1][live]] = 1
+    return adj
+
+
+def test_blocked_aggregate_is_bit_exact(setup):
+    _, _, batches = setup
+    bp, rp = intpath.batch_caps(batches)
+    rng = np.random.default_rng(0)
+    for batch in batches:
+        art = intpath.build_artifacts(batch, 4, block_pad=bp, rem_pad=rp)
+        vq = jnp.asarray(
+            rng.integers(0, 16, (batch.n_nodes, 8)).astype(np.int32))
+        got = np.asarray(intpath.blocked_aggregate(art, vq))
+        want = _dense_adj(batch) @ np.asarray(vq, np.int64)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_artifact_shapes_uniform_across_batches(setup):
+    # one jit bucket: every batch's artifacts must have identical shapes
+    _, _, batches = setup
+    bp, rp = intpath.batch_caps(batches)
+    arts = [intpath.build_artifacts(b, 4, block_pad=bp, rem_pad=rp)
+            for b in batches]
+    shapes = {(a.adjb.shape, a.row_idx.shape, a.rem_src.shape, a.xq.shape)
+              for a in arts}
+    assert len(shapes) == 1
+
+
+def test_too_small_caps_fail_loudly(setup):
+    _, _, batches = setup
+    batch = batches[0]
+    with pytest.raises(ValueError, match="block_pad"):
+        intpath.build_artifacts(batch, 4, block_pad=1)
+    n_rem = int((_dense_adj(batch) != 0).sum()
+                - np.asarray(intpath.build_artifacts(batch, 4).adjb).sum())
+    if n_rem:
+        with pytest.raises(ValueError, match="rem_pad"):
+            intpath.build_artifacts(batch, 4, rem_pad=0)
+
+
+def test_artifact_cache_builds_each_batch_once(setup):
+    _, _, batches = setup
+    bp, rp = intpath.batch_caps(batches)
+    cache = intpath.ArtifactCache(4, block_pad=bp, rem_pad=rp)
+    for _ in range(3):
+        for b in batches:
+            cache.get(b)
+    assert cache.builds == len(batches)
+
+
+def test_degrees_match_dense(setup):
+    _, _, batches = setup
+    batch = batches[0]
+    art = intpath.build_artifacts(batch, 4)
+    adj = _dense_adj(batch)
+    np.testing.assert_array_equal(np.asarray(art.deg)[:, 0], adj.sum(1))
+    np.testing.assert_array_equal(np.asarray(art.deg_in)[:, 0], adj.sum(0))
+
+
+def test_batch_iterator_infinite_mode_extends_finite(setup):
+    _, _, batches = setup
+    finite = list(batching.batch_iterator(batches, epochs=3, seed=7))
+    assert len(finite) == 3 * len(batches)
+    inf = list(itertools.islice(
+        batching.batch_iterator(batches, epochs=None, seed=7),
+        len(finite) + len(batches)))
+    # finite prefix identical (same steps, same batch objects) ...
+    for (sf, bf), (si, bi) in zip(finite, inf):
+        assert sf == si and bf is bi
+    # ... and the infinite iterator keeps going past any epoch budget
+    assert len(inf) == len(finite) + len(batches)
+    assert inf[-1][0] == len(inf) - 1
